@@ -1,0 +1,81 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (Python per
+block), so their wall time is NOT meaningful; the jnp reference path is the
+timed CPU number and the kernel is timed separately for completeness.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_weighted_agg(K=16, D=1_000_000):
+    key = jax.random.PRNGKey(0)
+    c = jax.random.uniform(key, (K,))
+    d = jax.random.normal(key, (K, D), jnp.float32)
+    ref_jit = jax.jit(ref.weighted_agg_ref)
+    us_ref = _time(ref_jit, c, d)
+    us_kern = _time(lambda c, d: ops.weighted_agg(c, d), c, d)
+    return [("weighted_agg_ref_jnp", us_ref, f"K={K},D={D}"),
+            ("weighted_agg_pallas_interp", us_kern, "interpret=True")]
+
+
+def bench_masked_sgd(D=1_000_000):
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (D,))
+    g = jax.random.normal(key, (D,))
+    ea = jnp.float32(0.01)
+    ref_jit = jax.jit(ref.masked_sgd_ref)
+    us_ref = _time(ref_jit, w, g, ea)
+    us_kern = _time(lambda w, g: ops.masked_sgd(w, g, ea), w, g)
+    return [("masked_sgd_ref_jnp", us_ref, f"D={D}"),
+            ("masked_sgd_pallas_interp", us_kern, "interpret=True")]
+
+
+def bench_flash(B=1, H=4, S=1024, hd=64):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, H, S, hd))
+    k = jax.random.normal(key, (B, H, S, hd))
+    v = jax.random.normal(key, (B, H, S, hd))
+    ref_jit = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us_ref = _time(ref_jit, q, k, v)
+    us_kern = _time(lambda q, k, v: ops.flash_attention(q, k, v), q, k, v)
+    return [("attention_ref_jnp", us_ref, f"B{B}H{H}S{S}d{hd}"),
+            ("flash_attention_pallas_interp", us_kern, "interpret=True")]
+
+
+def bench_ssd_chunk(G=48, Q=128, N=64, P=64):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    cum = jnp.cumsum(-jax.random.uniform(ks[0], (G, Q)) * 0.1, axis=-1)
+    C = jax.random.normal(ks[1], (G, Q, N))
+    B = jax.random.normal(ks[2], (G, Q, N))
+    x = jax.random.normal(ks[3], (G, Q, P))
+    ref_jit = jax.jit(ref.ssd_intra_chunk_ref)
+    us_ref = _time(ref_jit, cum, C, B, x)
+    us_kern = _time(lambda *a: ops.ssd_intra_chunk(*a), cum, C, B, x)
+    return [("ssd_intra_chunk_ref_jnp", us_ref, f"G{G}Q{Q}N{N}P{P}"),
+            ("ssd_intra_chunk_pallas_interp", us_kern, "interpret=True")]
+
+
+def run_all():
+    rows = []
+    rows += bench_weighted_agg()
+    rows += bench_masked_sgd()
+    rows += bench_flash()
+    rows += bench_ssd_chunk()
+    return rows

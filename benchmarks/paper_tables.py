@@ -1,0 +1,136 @@
+"""Paper-table benchmarks (one function per table/figure).
+
+Table 1 (analytic): scheme convergence on closed-form quadratics.
+Table 3: scheme accuracy deltas vs heterogeneity |T| on SYNTHETIC + images.
+Table 4: fast-reboot recovery epochs vs arrival time tau0.
+Table 5: include/exclude crossing epochs vs tau0 and (alpha, beta).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper import MNIST_MLP, SYNTHETIC_LR
+from repro.core.participation import TRACES
+from repro.data import (label_sorted_partition, make_class_dataset,
+                        synthetic_federation)
+from repro.fed import Client, FederatedTrainer
+from repro.models.small import init_small, logits_small, make_loss_fn
+
+
+def _eval_fn(cfg):
+    def f(params, x, y):
+        lg = logits_small(params, cfg, x)
+        ll = jax.nn.log_softmax(lg)
+        loss = -jnp.mean(jnp.take_along_axis(
+            ll, y[:, None].astype(jnp.int32), axis=1))
+        acc = jnp.mean((jnp.argmax(lg, -1) == y).astype(jnp.float32))
+        return float(loss), float(acc)
+    return f
+
+
+def _clients_synthetic(n, alpha, beta, n_traces, seed=0):
+    train, test = synthetic_federation(alpha, beta, n, seed=seed)
+    rng = np.random.default_rng(seed)
+    return [Client(x=tr[0], y=tr[1], trace=TRACES[rng.integers(0, n_traces)],
+                   x_test=te[0], y_test=te[1])
+            for tr, te in zip(train, test)]
+
+
+def _clients_images(n, n_traces, noniid, seed=0):
+    x, y = make_class_dataset(10, 400, seed=seed)
+    if noniid:
+        train, test = label_sorted_partition(x, y, n, seed=seed)
+    else:
+        from repro.data import iid_partition
+        train, test = iid_partition(x, y, n, seed=seed)
+    rng = np.random.default_rng(seed)
+    return [Client(x=tr[0], y=tr[1], trace=TRACES[rng.integers(0, n_traces)],
+                   x_test=te[0], y_test=te[1])
+            for tr, te in zip(train, test)]
+
+
+def _run(cfg, clients, scheme, rounds, eta0, seed=0):
+    tr = FederatedTrainer(
+        loss_fn=make_loss_fn(cfg), eval_fn=_eval_fn(cfg),
+        init_params=init_small(jax.random.PRNGKey(seed), cfg),
+        clients=clients, local_epochs=5, batch_size=cfg.batch_size,
+        scheme=scheme, eta0=eta0, seed=seed)
+    hist = tr.run(rounds, eval_every=5)
+    return float(np.mean([h.acc for h in hist[-3:]])), tr
+
+
+def table3_scheme_comparison(rounds=60, n_clients=24, dataset="synthetic"):
+    """CSV rows: dataset,iid,|T|,acc_A,acc_B,acc_C,B-A,C-B."""
+    rows = []
+    for noniid in (False, True):
+        for n_traces in (1, 4, 8):
+            accs = {}
+            for scheme in "ABC":
+                if dataset == "synthetic":
+                    ab = (1.0, 1.0) if noniid else (0.0, 0.0)
+                    clients = _clients_synthetic(n_clients, *ab, n_traces)
+                    cfg, eta0 = SYNTHETIC_LR, 1.0
+                else:
+                    clients = _clients_images(n_clients, n_traces, noniid)
+                    cfg, eta0 = MNIST_MLP, 0.05
+                accs[scheme], _ = _run(cfg, clients, scheme, rounds, eta0)
+            rows.append((dataset, "niid" if noniid else "iid", n_traces,
+                         accs["A"], accs["B"], accs["C"],
+                         accs["B"] - accs["A"], accs["C"] - accs["B"]))
+    return rows
+
+
+def table4_fast_reboot(rounds_after=60, taus=(10, 30, 50)):
+    """Recovery epochs (accuracy back to pre-arrival level) fast vs vanilla
+    reboot.  CSV rows: tau0, recover_fast, recover_vanilla."""
+    rows = []
+    for tau0 in taus:
+        rec = {}
+        for fast in (True, False):
+            clients = _clients_synthetic(9, 1.0, 1.0, 5, seed=4)
+            extra = _clients_synthetic(1, 1.0, 1.0, 5, seed=99)[0]
+            extra.active_from = tau0
+            clients.append(extra)
+            cfg = SYNTHETIC_LR
+            tr = FederatedTrainer(
+                loss_fn=make_loss_fn(cfg), eval_fn=_eval_fn(cfg),
+                init_params=init_small(jax.random.PRNGKey(0), cfg),
+                clients=clients, local_epochs=5, batch_size=20,
+                scheme="C", eta0=1.0, seed=0, fast_reboot=fast)
+            hist = tr.run(tau0 + rounds_after)
+            acc_before = hist[tau0 - 1].acc
+            rec[fast] = next(
+                (h.tau - tau0 for h in hist[tau0 + 1:]
+                 if h.acc >= acc_before), rounds_after)
+        rows.append((tau0, rec[True], rec[False]))
+    return rows
+
+
+def table5_departure_crossing(taus=(10, 25, 40), abs_=((0.1, 0.1),
+                                                       (1.0, 1.0))):
+    """Crossing epochs between include/exclude test-loss curves."""
+    rows = []
+    for (a, b) in abs_:
+        for tau0 in taus:
+            losses = {}
+            for policy in ("include", "exclude"):
+                clients = _clients_synthetic(10, a, b, 5, seed=7)
+                clients[0].departs_at = tau0
+                clients[0].departure_policy = policy
+                cfg = SYNTHETIC_LR
+                tr = FederatedTrainer(
+                    loss_fn=make_loss_fn(cfg), eval_fn=_eval_fn(cfg),
+                    init_params=init_small(jax.random.PRNGKey(0), cfg),
+                    clients=clients, local_epochs=5, batch_size=20,
+                    scheme="C", eta0=1.0, seed=0)
+                hist = tr.run(tau0 + 60)
+                # evaluate both on the *post-departure* objective of the run
+                losses[policy] = np.array([h.loss for h in hist[tau0:]])
+            diff = losses["exclude"] - losses["include"]
+            cross = next((i for i, d in enumerate(diff) if d <= 0), -1)
+            rows.append((a, b, tau0, cross))
+    return rows

@@ -1,0 +1,153 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms per
+(arch x shape) from the dry-run artifacts.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = HLO_traffic_per_device / HBM_bw_per_chip
+  collective term = collective_bytes_per_device / ICI_link_bw
+
+HLO quantities come from the scan-aware static analysis of the compiled
+SPMD module (launch/hlo_analysis.py) — per-device by construction.
+MODEL_FLOPS = 6 N_active D (train) / 2 N_active D (inference), giving the
+useful-compute ratio that exposes remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE: routed top-k only)."""
+    from repro.launch.steps import param_bytes
+    total = param_bytes(cfg) / np.dtype(cfg.dtype).itemsize
+    if not cfg.n_experts:
+        return total
+    # subtract inactive routed experts
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    inactive = (cfg.n_experts - cfg.top_k) * per_expert * cfg.moe_layers
+    return total - inactive
+
+
+def model_flops(cfg, shape, meta) -> float:
+    """Global useful FLOPs for one step of this shape."""
+    n_act = active_params(cfg)
+    if shape.kind == "train":
+        C = meta.get("clients", 16)
+        E = meta.get("local_epochs", 2)
+        b = meta.get("client_batch", shape.global_batch // C)
+        tokens = C * E * b * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.global_batch * shape.seq_len
+    return 2.0 * n_act * shape.global_batch  # decode: one token
+
+
+def load_results(art_dir="experiments/artifacts", mesh="pod"):
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in INPUT_SHAPES.items():
+            path = os.path.join(art_dir, f"dryrun_{arch}_{sname}_{mesh}.json")
+            if not os.path.exists(path):
+                continue
+            with open(path) as f:
+                r = json.load(f)
+            if r["status"] == "skipped":
+                rows.append({"arch": arch, "shape": sname,
+                             "status": "skipped",
+                             "reason": r.get("reason", "")})
+                continue
+            if r["status"] != "ok":
+                rows.append({"arch": arch, "shape": sname,
+                             "status": "error",
+                             "reason": r.get("error", "")[:120]})
+                continue
+            a = r["hlo_analysis"]
+            n_dev = r["devices"]
+            t_comp = a["flops"] / PEAK_FLOPS_BF16
+            t_mem = a["traffic_bytes"] / HBM_BW
+            t_coll = a["collective_bytes"] / ICI_BW
+            terms = {"compute": t_comp, "memory": t_mem,
+                     "collective": t_coll}
+            dom = max(terms, key=terms.get)
+            mf = model_flops(cfg, INPUT_SHAPES[sname], r.get("meta") or {})
+            mf_dev = mf / n_dev
+            rows.append({
+                "arch": arch, "shape": sname, "status": "ok",
+                "devices": n_dev,
+                "t_compute_s": t_comp, "t_memory_s": t_mem,
+                "t_collective_s": t_coll, "dominant": dom,
+                "model_flops_per_dev": mf_dev,
+                "hlo_flops_per_dev": a["flops"],
+                "useful_ratio": mf_dev / a["flops"] if a["flops"] else 0.0,
+                "mem_per_dev_bytes": (r.get("memory") or {}).get(
+                    "bytes_per_device", -1),
+                "fits_hbm": ((r.get("memory") or {}).get(
+                    "bytes_per_device", 0) or 0) < HBM_PER_CHIP,
+                "collectives_per_op": a.get("collectives_per_op", {}),
+            })
+    return rows
+
+
+FIXES = {
+    ("compute", "train"): "raise per-chip batch / cut remat recompute",
+    ("compute", "prefill"): "flash-attention kernel (skip masked blocks)",
+    ("compute", "decode"): "batch more requests per chip",
+    ("memory", "train"): "reduce delta/accumulator copies; fuse SGD update",
+    ("memory", "prefill"): "blockwise attention to cut score traffic",
+    ("memory", "decode"): "shrink KV reads: MLA/window cache, quantize kv",
+    ("collective", "train"): "overlap grad psum with compute; shard embed",
+    ("collective", "prefill"): "reshard activations once, not per layer",
+    ("collective", "decode"): "kv-head-aligned sharding to kill resharding",
+}
+
+
+def markdown_table(rows) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | mem/dev GB | fits 16GB | suggested fix |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']} | — | — | — | {r['reason'][:60]} |")
+            continue
+        kind = INPUT_SHAPES[r["shape"]].kind
+        fix = FIXES.get((r["dominant"], kind), "")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['mem_per_dev_bytes'] / 1e9:.1f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} | {fix} |")
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--art", default="experiments/artifacts")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = load_results(args.art, args.mesh)
+    if args.csv:
+        keys = ["arch", "shape", "status", "t_compute_s", "t_memory_s",
+                "t_collective_s", "dominant", "useful_ratio",
+                "mem_per_dev_bytes"]
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(str(r.get(k, "")) for k in keys))
+    else:
+        print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

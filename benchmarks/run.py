@@ -1,0 +1,72 @@
+"""Benchmark harness: one function per paper table + kernel micro-bench +
+roofline summary.  Prints ``name,us_per_call,derived`` style CSV blocks.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick set
+  PYTHONPATH=src python -m benchmarks.run --full     # full paper tables
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-size paper tables (slower)")
+    ap.add_argument("--skip-tables", action="store_true")
+    args = ap.parse_args()
+
+    print("# kernels: name,us_per_call,config")
+    from benchmarks.kernels_bench import run_all as kern_all
+    for name, us, cfg in kern_all():
+        print(f"{name},{us:.1f},{cfg}")
+    sys.stdout.flush()
+
+    if not args.skip_tables:
+        from benchmarks.paper_tables import (table3_scheme_comparison,
+                                             table4_fast_reboot,
+                                             table5_departure_crossing)
+        rounds = 100 if args.full else 40
+        print("\n# table3: dataset,iid,|T|,acc_A,acc_B,acc_C,B-A,C-B")
+        for row in table3_scheme_comparison(rounds=rounds):
+            print(",".join(f"{x:.4f}" if isinstance(x, float) else str(x)
+                           for x in row))
+        sys.stdout.flush()
+
+        print("\n# table4: tau0,recover_epochs_fast,recover_epochs_vanilla")
+        for row in table4_fast_reboot(rounds_after=60 if args.full else 40):
+            print(",".join(str(x) for x in row))
+        sys.stdout.flush()
+
+        print("\n# table5: alpha,beta,tau0,crossing_epochs")
+        for row in table5_departure_crossing():
+            print(",".join(str(x) for x in row))
+        sys.stdout.flush()
+
+    if not args.skip_tables:
+        from benchmarks.bound_check import run as bound_run
+        print("\n# thm3.1 envelope: tau,measured_err2,bound,within")
+        for tau, err, bound in bound_run(rounds=100):
+            print(f"{tau},{err:.6f},{bound:.4f},{err <= bound}")
+        sys.stdout.flush()
+
+    # roofline summary from dry-run artifacts (if present)
+    try:
+        from benchmarks.roofline import load_results
+        rows = load_results()
+        ok = [r for r in rows if r["status"] == "ok"]
+        if ok:
+            print("\n# roofline: arch,shape,dominant,compute_s,memory_s,"
+                  "collective_s,useful_ratio")
+            for r in ok:
+                print(f"{r['arch']},{r['shape']},{r['dominant']},"
+                      f"{r['t_compute_s']:.4g},{r['t_memory_s']:.4g},"
+                      f"{r['t_collective_s']:.4g},{r['useful_ratio']:.2f}")
+    except Exception as e:  # artifacts absent: not an error for the bench
+        print(f"\n# roofline: skipped ({e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: federated training with flexible device participation.
+
+Reproduces the paper's core loop in ~30 lines of user code: 20 clients
+with heterogeneous participation traces, non-IID SYNTHETIC(1,1) data,
+Scheme-C debiased aggregation.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper import SYNTHETIC_LR
+from repro.core.participation import TRACES
+from repro.data import synthetic_federation
+from repro.fed import Client, FederatedTrainer
+from repro.models.small import init_small, logits_small, make_loss_fn
+
+
+def eval_fn(params, x, y):
+    lg = logits_small(params, SYNTHETIC_LR, x)
+    ll = jax.nn.log_softmax(lg)
+    loss = -jnp.mean(jnp.take_along_axis(ll, y[:, None].astype(jnp.int32), 1))
+    acc = jnp.mean((jnp.argmax(lg, -1) == y).astype(jnp.float32))
+    return float(loss), float(acc)
+
+
+def main():
+    train, test = synthetic_federation(alpha=1.0, beta=1.0, n_clients=20,
+                                       seed=0)
+    rng = np.random.default_rng(0)
+    clients = [
+        Client(x=tr[0], y=tr[1],
+               trace=TRACES[rng.integers(0, 8)],  # all 8 device classes
+               x_test=te[0], y_test=te[1])
+        for tr, te in zip(train, test)
+    ]
+    trainer = FederatedTrainer(
+        loss_fn=make_loss_fn(SYNTHETIC_LR),
+        eval_fn=eval_fn,
+        init_params=init_small(jax.random.PRNGKey(0), SYNTHETIC_LR),
+        clients=clients,
+        local_epochs=5, batch_size=20,
+        scheme="C",          # the paper's debiased aggregation
+        eta0=1.0,
+    )
+    hist = trainer.run(n_rounds=50, eval_every=5)
+    for h in hist[::5]:
+        print(f"round {h.tau:3d}  loss {h.loss:.4f}  acc {h.acc:.3f}  "
+              f"active {h.n_active}/20")
+    print(f"\nfinal accuracy: {hist[-1].acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end serving driver: batched requests against a small model with
+the production cache machinery (prefill + streaming decode).
+
+Runs the REAL mamba2-130m configuration (130M params, attention-free SSD:
+the O(1)-state decode makes CPU serving practical), plus a reduced GQA
+model to exercise the ring-buffer path.
+
+  PYTHONPATH=src python examples/serve_batched.py [--quick]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer
+from repro.models.params import init_params, param_count
+
+
+def serve(cfg, batch, prompt_len, gen, seed=0):
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    key = jax.random.PRNGKey(seed)
+    shp = ((batch, prompt_len, cfg.n_codebooks) if cfg.n_codebooks
+           else (batch, prompt_len))
+    prompts = jax.random.randint(key, shp, 0, cfg.vocab)
+    decode = jax.jit(lambda p, c, t, pos: transformer.decode_step(
+        p, cfg, c, t, pos))
+
+    t0 = time.time()
+    cache = transformer.init_cache(cfg, batch, prompt_len + gen)
+    logits, cache = transformer.prefill(params, cfg, prompts, cache)
+    t_prefill = time.time() - t0
+
+    tok_shape = ((batch, 1, cfg.n_codebooks) if cfg.n_codebooks
+                 else (batch, 1))
+    t0 = time.time()
+    for i in range(gen):
+        key, sk = jax.random.split(key)
+        nxt = jax.random.categorical(sk, logits, axis=-1)
+        nxt = nxt.reshape(tok_shape).astype(jnp.int32)
+        logits, cache = decode(params, cache, nxt, jnp.int32(prompt_len + i))
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t0
+    return param_count(params), t_prefill, t_decode
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    runs = [
+        # (the paper's kind is training, but the serving substrate is a
+        #  first-class deliverable: real 130M model, batched requests)
+        ("mamba2-130m", False, 4, 32, 16) if args.quick else
+        ("mamba2-130m", False, 8, 128, 64),
+        ("starcoder2-3b", True, 4, 64, 32),   # reduced: ring-buffer SWA
+        ("deepseek-v2-lite-16b", True, 4, 64, 32),  # reduced: MLA cache
+    ]
+    for arch, reduced, B, S, G in runs:
+        cfg = get_config(arch)
+        if reduced:
+            cfg = cfg.reduced()
+        n, tp, td = serve(cfg, B, S, G)
+        print(f"{arch:24s} ({'reduced' if reduced else 'FULL'}) "
+              f"params={n:>12,}  prefill {B}x{S}: {tp:6.2f}s  "
+              f"decode {B}x{G}: {td:6.2f}s "
+              f"({B * G / td:7.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

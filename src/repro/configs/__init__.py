@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    PAPER_IDS,
+    INPUT_SHAPES,
+    ArchConfig,
+    FedConfig,
+    InputShape,
+    all_configs,
+    get_config,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "PAPER_IDS",
+    "INPUT_SHAPES",
+    "ArchConfig",
+    "FedConfig",
+    "InputShape",
+    "all_configs",
+    "get_config",
+]

@@ -1,0 +1,89 @@
+"""Aggregation schemes (paper §4.1) and the generalized FedAvg update.
+
+Eq. (2):  w <- w + sum_k p_tau^k (w_k - w),  with round-varying p_tau^k.
+
+Scheme A: only complete devices (s=E), p_tau^k = N p^k / K_tau (round
+          dropped if K_tau = 0).
+Scheme B: accept partial work, fixed p_tau^k = p^k.
+Scheme C: debiased, p_tau^k = (E / s_tau^k) p^k (0 when inactive) — the
+          paper's contribution; the only scheme converging to the global
+          optimum under heterogeneous participation (Thm 3.1 / Table 1).
+
+Coefficients are plain device arrays, so one compiled round step serves
+every scheme and every participation pattern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def scheme_coefficients(scheme: str, p: jnp.ndarray, s: jnp.ndarray,
+                        E: int) -> jnp.ndarray:
+    """p: (C,) static data weights p^k; s: (C,) completed epochs.
+    Returns p_tau: (C,) aggregation coefficients."""
+    p = jnp.asarray(p, jnp.float32)
+    s = jnp.asarray(s, jnp.float32)
+    if scheme == "A":
+        complete = (s >= E).astype(jnp.float32)
+        K = jnp.sum(complete)
+        N = p.shape[0]
+        return jnp.where(K > 0, N * p * complete / jnp.maximum(K, 1.0), 0.0)
+    if scheme == "B":
+        return p * (s > 0)
+    if scheme == "C":
+        return jnp.where(s > 0, E * p / jnp.maximum(s, 1.0), 0.0)
+    raise ValueError(f"unknown scheme {scheme}")
+
+
+def theta_bound(scheme: str, n_clients: int, E: int) -> float:
+    """Assumption 3.5 upper bound p_tau^k / p^k <= theta."""
+    return {"A": float(n_clients), "B": 1.0, "C": float(E)}[scheme]
+
+
+def aggregate_deltas(params, deltas, coeffs):
+    """w + sum_k c_k delta_k over a stacked client axis.
+
+    deltas: pytree with leading client dim (C, ...); coeffs: (C,).
+    This is the jnp reference path; kernels/weighted_agg is the fused
+    Pallas path used by the benchmarked aggregator.
+    """
+    def upd(p, d):
+        c = coeffs.astype(jnp.float32).reshape((-1,) + (1,) * (d.ndim - 1))
+        return (p.astype(jnp.float32)
+                + jnp.sum(c * d.astype(jnp.float32), axis=0)).astype(p.dtype)
+
+    return jax.tree.map(upd, params, deltas)
+
+
+def accumulate_delta(acc, delta, coeff):
+    """Streaming form for the client-sequential mode: acc += c * delta."""
+    return jax.tree.map(
+        lambda a, d: a + coeff.astype(jnp.float32) * d.astype(jnp.float32),
+        acc, delta)
+
+
+def apply_accumulator(params, acc):
+    return jax.tree.map(
+        lambda p, a: (p.astype(jnp.float32) + a).astype(p.dtype), params, acc)
+
+
+def expected_coeff_stats(scheme: str, p: np.ndarray, trace_samples,
+                         E: int, n_rounds: int = 2000, seed: int = 0):
+    """Monte-Carlo estimates of E[p_tau^k s_tau^k] etc. used by the theory
+    module (learning-rate scale, z_tau detection).  trace_samples(rng) must
+    return s: (C,) for one round."""
+    rng = np.random.default_rng(seed)
+    C = len(p)
+    ps_sum = np.zeros(C)
+    for _ in range(n_rounds):
+        s = trace_samples(rng)
+        c = np.asarray(scheme_coefficients(scheme, jnp.asarray(p),
+                                           jnp.asarray(s), E))
+        ps_sum += c * s
+    Eps = ps_sum / n_rounds
+    ratio = Eps / np.maximum(p, 1e-12)
+    z = float(np.std(ratio) > 1e-6 * max(1.0, np.mean(np.abs(ratio))))
+    return {"E_ps": Eps, "ratio": ratio, "z": z,
+            "E_sum_ps": float(np.sum(Eps))}

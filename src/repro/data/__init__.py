@@ -1,0 +1,12 @@
+from repro.data.images import (iid_partition, label_sorted_partition,
+                               make_class_dataset)
+from repro.data.synthetic import synthetic_federation
+from repro.data.tokens import fed_lm_batches
+
+__all__ = [
+    "iid_partition",
+    "label_sorted_partition",
+    "make_class_dataset",
+    "synthetic_federation",
+    "fed_lm_batches",
+]

@@ -1,0 +1,3 @@
+from repro.fed.driver import Client, FederatedTrainer
+
+__all__ = ["Client", "FederatedTrainer"]

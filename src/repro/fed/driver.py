@@ -1,0 +1,175 @@
+"""Host-level federated round driver.
+
+Implements the full paper protocol around the jitted round step:
+  * per-round participation sampling from device traces (alpha masks),
+  * Scheme A/B/C aggregation coefficients,
+  * arrivals with objective shift + fast-reboot (coefficient boost + LR
+    restart, §4.2),
+  * departures with include/exclude applicability decision (§4.3),
+  * membership is handled by masking (alpha=0, coeff=0), so the compiled
+    round step never recompiles as devices come and go.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import scheme_coefficients
+from repro.core.arrivals import RebootState, staircase_lr
+from repro.core.departures import BoundTerms, should_exclude
+from repro.core.fed_step import make_fed_round
+from repro.core.participation import Trace
+
+
+@dataclass
+class Client:
+    x: np.ndarray
+    y: np.ndarray
+    trace: Trace
+    x_test: Optional[np.ndarray] = None
+    y_test: Optional[np.ndarray] = None
+    # membership
+    active_from: int = 0          # round the device joins (0 = founding)
+    departs_at: Optional[int] = None
+    departure_policy: str = "exclude"   # exclude | include | auto
+    gamma_l: float = 1.0          # non-IID estimate used by policy "auto"
+
+    @property
+    def n(self) -> int:
+        return len(self.y)
+
+
+@dataclass
+class RoundRecord:
+    tau: int
+    loss: float
+    acc: float
+    eta: float
+    n_active: int
+    s: np.ndarray
+    event: str = ""
+
+
+class FederatedTrainer:
+    def __init__(self, *, loss_fn: Callable, eval_fn: Callable,
+                 init_params, clients: List[Client], local_epochs: int = 5,
+                 batch_size: int = 10, scheme: str = "C", eta0: float = 0.01,
+                 reboot_boost: float = 3.0, fast_reboot: bool = True,
+                 horizon: Optional[int] = None,
+                 bound_terms: Optional[BoundTerms] = None,
+                 seed: int = 0):
+        self.loss_fn = loss_fn
+        self.eval_fn = eval_fn  # eval_fn(params, x, y) -> (loss, acc)
+        self.params = init_params
+        self.clients = clients
+        self.E = local_epochs
+        self.B = batch_size
+        self.scheme = scheme
+        self.eta0 = eta0
+        self.reboot_boost = reboot_boost
+        self.fast_reboot = fast_reboot
+        # Corollary 4.0.3 inputs for departure_policy == "auto": the
+        # training deadline T and the fitted Theorem-3.1 bound terms
+        self.horizon = horizon
+        self.bound_terms = bound_terms or BoundTerms(
+            D=5.0, V=20.0, gamma=10.0, E=local_epochs)
+        self.rng = np.random.default_rng(seed)
+        self.round_fn = jax.jit(make_fed_round(loss_fn, "client_parallel"))
+        # membership bookkeeping
+        self.objective: set = {i for i, c in enumerate(clients)
+                               if c.active_from == 0}
+        self.reboots: List[RebootState] = []
+        self.lr_shift_tau = 0
+        self.history: List[RoundRecord] = []
+
+    # -- weights over the current objective set -----------------------------
+    def data_weights(self) -> np.ndarray:
+        p = np.zeros(len(self.clients))
+        total = sum(self.clients[i].n for i in self.objective)
+        for i in self.objective:
+            p[i] = self.clients[i].n / total
+        return p
+
+    def _sample_round(self, tau: int):
+        C = len(self.clients)
+        alpha = np.zeros((C, self.E), np.float32)
+        xdim = self.clients[0].x.shape[1:]
+        bx = np.zeros((C, self.E, self.B, *xdim), np.float32)
+        by = np.zeros((C, self.E, self.B), np.int32)
+        for i, cl in enumerate(self.clients):
+            participating = (i in self.objective
+                             and tau >= cl.active_from
+                             and (cl.departs_at is None or tau < cl.departs_at))
+            if not participating:
+                continue
+            alpha[i] = (np.arange(self.E)
+                        < cl.trace.sample_s(self.rng, self.E)).astype(np.float32)
+            idx = self.rng.integers(0, cl.n, size=(self.E, self.B))
+            bx[i] = cl.x[idx]
+            by[i] = cl.y[idx]
+        return alpha, {"x": bx, "y": by}
+
+    # -- events --------------------------------------------------------------
+    def _handle_events(self, tau: int) -> str:
+        ev = ""
+        for i, cl in enumerate(self.clients):
+            if cl.active_from == tau and i not in self.objective:
+                # arrival: mandatory objective shift (+ optional fast-reboot)
+                self.objective.add(i)
+                self.lr_shift_tau = tau
+                if self.fast_reboot:
+                    self.reboots.append(RebootState(tau, i,
+                                                    self.reboot_boost))
+                ev += f"arrival:{i};"
+            if cl.departs_at == tau and i in self.objective:
+                policy = cl.departure_policy
+                if policy == "auto":
+                    # Corollary 4.0.3: exclude iff enough training remains
+                    T = self.horizon if self.horizon is not None \
+                        else tau + 100
+                    policy = "exclude" if should_exclude(
+                        T, tau, self.bound_terms, cl.gamma_l) else "include"
+                if policy == "exclude":
+                    self.objective.discard(i)
+                    self.lr_shift_tau = tau
+                    ev += f"departure-exclude:{i};"
+                else:
+                    ev += f"departure-include:{i};"
+        return ev
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, n_rounds: int, eval_every: int = 1):
+        for tau in range(n_rounds):
+            ev = self._handle_events(tau)
+            p = self.data_weights()
+            alpha, batches = self._sample_round(tau)
+            s = alpha.sum(axis=1)
+            coeffs = np.array(scheme_coefficients(
+                self.scheme, jnp.asarray(p), jnp.asarray(s), self.E))
+            for rb in self.reboots:
+                coeffs[rb.client_idx] *= rb.coeff_multiplier(tau)
+            eta = staircase_lr(self.eta0, tau + 1, self.lr_shift_tau)
+            self.params, _m = self.round_fn(
+                self.params,
+                {"x": jnp.asarray(batches["x"]),
+                 "y": jnp.asarray(batches["y"])},
+                jnp.asarray(alpha), jnp.asarray(coeffs),
+                jnp.float32(eta))
+            if tau % eval_every == 0 or ev:
+                loss, acc = self.evaluate()
+            self.history.append(RoundRecord(tau, float(loss), float(acc),
+                                            eta, int((s > 0).sum()), s, ev))
+        return self.history
+
+    def evaluate(self, include_idx: Optional[set] = None):
+        idx = include_idx if include_idx is not None else self.objective
+        xs = np.concatenate([self.clients[i].x_test for i in idx
+                             if self.clients[i].x_test is not None])
+        ys = np.concatenate([self.clients[i].y_test for i in idx
+                             if self.clients[i].y_test is not None])
+        return self.eval_fn(self.params, jnp.asarray(xs), jnp.asarray(ys))

@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: fused masked local-SGD update (equivalent view).
+
+w' = w - eta * alpha * g      (paper Eq. 1 with the A.1.1 alpha mask)
+
+Fuses the mask/scale/subtract into one VMEM pass instead of three HBM
+round-trips.  eta*alpha arrives as a (1,1) scalar tile."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _sgd_kernel(s_ref, w_ref, g_ref, o_ref):
+    scale = s_ref[0, 0]
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    o_ref[...] = (w - scale * g).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def masked_sgd(w, g, eta_alpha, *, block: int = DEFAULT_BLOCK,
+               interpret: bool = True):
+    """w, g: (D,); eta_alpha: scalar (eta * alpha_t).  Returns updated w."""
+    D = w.shape[0]
+    pad = (-D) % block
+    if pad:
+        w = jnp.pad(w, (0, pad))
+        g = jnp.pad(g, (0, pad))
+    Dp = D + pad
+    scale = jnp.reshape(eta_alpha.astype(jnp.float32), (1, 1))
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(Dp // block,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Dp), w.dtype),
+        interpret=interpret,
+    )(scale, w.reshape(1, Dp), g.reshape(1, Dp))
+    return out[0, :D]

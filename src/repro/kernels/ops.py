@@ -1,0 +1,64 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+On this CPU container the kernels run with interpret=True (the kernel body
+executes in Python per block — bit-exact semantics, no TPU).  On a real TPU
+set REPRO_PALLAS_INTERPRET=0 (or pass interpret=False).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.masked_sgd import masked_sgd as _masked_sgd
+from repro.kernels.ssd_chunk import ssd_intra_chunk as _ssd_intra
+from repro.kernels.weighted_agg import weighted_agg as _weighted_agg
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def weighted_agg(coeffs, deltas, *, block=2048, interpret=None):
+    return _weighted_agg(coeffs, deltas, block=block,
+                         interpret=INTERPRET if interpret is None else interpret)
+
+
+def weighted_agg_tree(params, deltas_tree, coeffs, *, interpret=None):
+    """Aggregate a stacked-client pytree via the fused kernel:
+    new_w = w + weighted_agg(coeffs, flatten(deltas))."""
+    leaves, treedef = jax.tree.flatten(deltas_tree)
+    p_leaves = jax.tree.leaves(params)
+    outs = []
+    for p, d in zip(p_leaves, leaves):
+        K = d.shape[0]
+        flat = d.reshape(K, -1)
+        agg = weighted_agg(coeffs, flat, interpret=interpret)
+        outs.append((p.astype(jnp.float32).reshape(-1) + agg)
+                    .reshape(p.shape).astype(p.dtype))
+    return jax.tree.unflatten(jax.tree.structure(params), outs)
+
+
+def masked_sgd(w, g, eta_alpha, *, block=4096, interpret=None):
+    return _masked_sgd(w, g, jnp.asarray(eta_alpha),
+                       block=block,
+                       interpret=INTERPRET if interpret is None else interpret)
+
+
+def ssd_intra_chunk(cum, C, B, xdt, *, interpret=None):
+    """Mamba2 SSD intra-chunk dual.  cum: (G,Q); C,B: (G,Q,N);
+    xdt: (G,Q,P) -> (G,Q,P) f32."""
+    return _ssd_intra(cum, C, B, xdt,
+                      interpret=INTERPRET if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, blk_q=128, blk_k=128,
+                    interpret=None):
+    """q: (B,H,S,hd); k,v: (B,KV,S,hd) — kv heads repeated to H if GQA."""
+    H, KV = q.shape[1], k.shape[1]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    return _flash(q, k, v, causal=causal, blk_q=blk_q, blk_k=blk_k,
+                  interpret=INTERPRET if interpret is None else interpret)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: SSD intra-chunk "attention dual" (Mamba2, arXiv:
+2405.21060 §5).
+
+For one chunk (per batch x chunk x head grid cell):
+
+    L[i,j]   = exp(cum[i] - cum[j])        for j <= i, else 0
+    scores   = (C @ B^T) * L               (Q, Q)
+    Y_intra  = scores @ (x * dt)           (Q, P)
+
+This is the MXU-heavy inner loop of the chunked SSD scan
+(models/ssd.ssd_chunked).  One grid cell holds the full (Q,N), (Q,Q),
+(Q,P) working set in VMEM (Q<=256, N<=128, P<=64 -> ~0.5 MB), with two
+MXU matmuls per cell.  The inter-chunk state recurrence stays in jnp
+(it is O(S/Q) sequential and tiny).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(cum_ref, c_ref, b_ref, x_ref, o_ref):
+    cum = cum_ref[0]                                   # (Q,)
+    C = c_ref[0]                                       # (Q, N)
+    B = b_ref[0]                                       # (Q, N)
+    xdt = x_ref[0]                                     # (Q, P)
+    Q = cum.shape[0]
+    s = jnp.dot(C, B.T, preferred_element_type=jnp.float32)   # (Q, Q)
+    diff = cum[:, None] - cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(iota_j <= iota_i, jnp.exp(diff), 0.0)
+    s = s * L
+    o_ref[0] = jnp.dot(s.astype(xdt.dtype), xdt,
+                       preferred_element_type=jnp.float32
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(cum, C, B, xdt, *, interpret: bool = True):
+    """cum: (G_cells, Q); C, B: (G_cells, Q, N); xdt: (G_cells, Q, P).
+
+    G_cells = batch * n_chunks * n_heads (caller flattens; group-shared
+    B/C are expanded to per-head).  Returns (G_cells, Q, P) float32.
+    """
+    G_cells, Q, N = C.shape
+    P = xdt.shape[-1]
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=(G_cells,),
+        in_specs=[
+            pl.BlockSpec((1, Q), lambda g: (g, 0)),
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, Q, P), lambda g: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, P), lambda g: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G_cells, Q, P), jnp.float32),
+        interpret=interpret,
+    )(cum, C, B, xdt)

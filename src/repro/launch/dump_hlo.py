@@ -1,0 +1,41 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+# Helper: compile one (arch x shape x mesh) and dump the scheduled HLO for
+# offline profiling (used by the §Perf hypothesis loop).
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import make_step
+    from repro.models.sharding import use_mesh
+
+    cfg = get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    with use_mesh(mesh):
+        bundle = make_step(cfg, INPUT_SHAPES[args.shape], mesh)
+        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings)
+        compiled = jitted.lower(*bundle.input_specs).compile()
+        out = args.out or f"/tmp/hlo_{args.arch}_{args.shape}_{args.mesh}.txt"
+        with open(out, "w") as f:
+            f.write(compiled.as_text())
+        mem = compiled.memory_analysis()
+        print(f"wrote {out}")
+        print(f"temp={mem.temp_size_in_bytes / 1e9:.2f}GB "
+              f"arg={mem.argument_size_in_bytes / 1e9:.2f}GB")
+
+
+if __name__ == "__main__":
+    main()

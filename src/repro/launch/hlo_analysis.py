@@ -1,0 +1,353 @@
+"""Static analysis of compiled (scheduled, SPMD-partitioned) HLO text.
+
+Why: ``compiled.cost_analysis()`` counts each while-loop body ONCE, so any
+lax.scan (layers, local epochs, clients, loss chunks) is dramatically
+under-counted.  This analyzer parses the HLO module, builds the call tree
+(while bodies scaled by their ``known_trip_count``), and produces
+scan-corrected per-device totals:
+
+  flops            — matmul (dot) FLOPs: 2 * prod(result) * prod(contracted)
+  traffic_bytes    — HBM traffic proxy: operand+result bytes of every
+                     surviving (post-fusion) instruction; fusion internals
+                     excluded (they live in registers/VMEM)
+  collective_bytes — result bytes of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute,
+                     per kind
+
+All shapes in the partitioned module are per-device, so these feed the
+per-chip roofline terms directly.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[a-z][a-z0-9]*\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s+([\w\-]+)\((.*)$")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=%([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, str] = field(default_factory=dict)
+    instrs: List[Instr] = field(default_factory=list)
+
+
+# ops that produce no real HBM traffic
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "while", "conditional", "call", "custom-call",
+    "partition-id", "replica-id", "bitcast-convert",
+}
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if not line.startswith(" "):  # potential computation header
+            m = _HEADER_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                # parse parameter shapes "name: f32[...]"
+                for pname, pshape in re.findall(
+                        r"([\w.\-]+):\s*(\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\]"
+                        r"(?:\{[^}]*\})?)", m.group(2)):
+                    cur.params[pname] = pshape
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.instrs.append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+    return comps
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    traffic: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, int] = field(default_factory=dict)
+
+    def add(self, other: "Cost", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.traffic += other.traffic * scale
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * scale
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + int(v * scale)
+
+
+def _local_shape(comp: Computation, name: str) -> Optional[str]:
+    for ins in comp.instrs:
+        if ins.name == name:
+            return ins.shape
+    return comp.params.get(name)
+
+
+def _instr_traffic(comp: Computation, ins: Instr) -> float:
+    """HBM traffic estimate for one surviving instruction.
+
+    Slicing/in-place updates are aliasing-aware: a dynamic-update-slice
+    writes only the update (the full buffer operand is aliased, not
+    copied), and a dynamic-slice/gather reads ~the result size, not the
+    whole operand.  Without this, scan-carried stacks (n_layers x
+    residual) count as full reads/writes per layer — a ~10x overcount.
+    """
+    res = _shape_bytes(ins.shape)
+    rest_head = ins.rest.split(", metadata")[0]
+    opnds = []
+    for opd in _OPERAND_RE.findall(rest_head)[:8]:
+        s = _local_shape(comp, opd)
+        if s:
+            opnds.append(_shape_bytes(s))
+    is_dus = (ins.op == "dynamic-update-slice"
+              or "dynamic_update_slice" in ins.rest)
+    is_slice = ins.op in ("dynamic-slice", "gather", "slice") \
+        or "dynamic_slice" in ins.rest
+    if is_dus:
+        # write the update + read small operands; the aliased full buffer
+        # (same size as the result) moves nothing
+        small = [o for o in opnds if o < res]
+        return 2.0 * sum(small) if small else 2.0 * res / max(len(opnds), 1)
+    if is_slice:
+        # read ~result, write result; ignore the big sliced operand
+        small = [o for o in opnds if o <= 4 * res]
+        return res + sum(small)
+    return res + sum(opnds)
+
+
+def analyze(text: str) -> Dict:
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _HEADER_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:  # fall back: last computation
+        entry = list(comps)[-1]
+
+    memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def comp_cost(cname: str, flops_only: bool) -> Cost:
+        key = (cname, flops_only)
+        if key in memo:
+            return memo[key]
+        memo[key] = Cost()  # break cycles defensively
+        comp = comps.get(cname)
+        if comp is None:
+            return memo[key]
+        total = Cost()
+        for ins in comp.instrs:
+            # --- flops ---
+            if ins.op == "dot":
+                dims = _shape_dims(ins.shape)
+                ops = _OPERAND_RE.findall(ins.rest)
+                cm = _CONTRACT_RE.search(ins.rest)
+                if dims is not None and ops and cm:
+                    lhs_shape = _local_shape(comp, ops[0])
+                    lhs_dims = _shape_dims(lhs_shape) if lhs_shape else None
+                    k = 1
+                    if lhs_dims:
+                        for ci in cm.group(1).split(","):
+                            if ci:
+                                k *= lhs_dims[int(ci)]
+                    n_out = 1
+                    for d in dims:
+                        n_out *= d
+                    total.flops += 2.0 * n_out * k
+            elif ins.op == "convolution":
+                # rough: 2 * out_elems * kernel_elems_per_output
+                dims = _shape_dims(ins.shape)
+                ops = _OPERAND_RE.findall(ins.rest)
+                if dims and len(ops) >= 2:
+                    ksh = _local_shape(comp, ops[1])
+                    kd = _shape_dims(ksh) if ksh else None
+                    if kd:
+                        n_out = 1
+                        for d in dims:
+                            n_out *= d
+                        kelems = 1
+                        for d in kd[:-1]:  # all but output-feature dim
+                            kelems *= d
+                        total.flops += 2.0 * n_out * kelems
+            # --- collectives ---
+            if ins.op in COLLECTIVES or any(
+                    ins.op == f"{c}-start" for c in COLLECTIVES):
+                kind = ins.op.replace("-start", "")
+                b = _shape_bytes(ins.shape)
+                if not flops_only:
+                    total.coll[kind] = total.coll.get(kind, 0.0) + b
+                    total.coll_count[kind] = total.coll_count.get(kind, 0) + 1
+            # --- traffic ---
+            if not flops_only and ins.op not in _NO_TRAFFIC \
+                    and not ins.op.endswith("-done"):
+                total.traffic += _instr_traffic(comp, ins)
+            # --- callees ---
+            if ins.op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                for role, sub in re.findall(r"(body|condition)=%([\w.\-]+)",
+                                            ins.rest):
+                    total.add(comp_cost(sub, flops_only), scale=trip)
+            elif ins.op == "fusion":
+                cm2 = _CALL_RE.search(ins.rest)
+                if cm2:
+                    # fusion internals: count flops only (traffic is the
+                    # fusion boundary, already counted above)
+                    total.add(comp_cost(cm2.group(1), True))
+            elif ins.op in ("call", "async-start"):
+                cm2 = _CALL_RE.search(ins.rest)
+                if cm2:
+                    total.add(comp_cost(cm2.group(1), flops_only))
+            elif ins.op == "conditional":
+                bm = _BRANCH_RE.search(ins.rest)
+                if bm:
+                    subs = _OPERAND_RE.findall(bm.group(1))
+                    costs = [comp_cost(s, flops_only) for s in subs]
+                    if costs:
+                        best = max(costs, key=lambda c: c.flops + c.traffic)
+                        total.add(best)
+        memo[key] = total
+        return total
+
+    c = comp_cost(entry, False)
+    return {
+        "flops": c.flops,
+        "traffic_bytes": c.traffic,
+        "collective_bytes": sum(c.coll.values()),
+        "collectives_per_op": c.coll,
+        "collective_counts": c.coll_count,
+        "n_computations": len(comps),
+    }
+
+
+def top_traffic(text: str, n: int = 25):
+    """Per-instruction traffic attribution, scaled by while trip counts:
+    the 'profile' used by the §Perf hypothesis loop."""
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _HEADER_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+
+    # compute the multiplier of each computation (product of trip counts
+    # along the call chain)
+    mult: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            scale = mult[cname]
+            subs = []
+            if ins.op == "while":
+                tm = _TRIP_RE.search(ins.rest)
+                trip = int(tm.group(1)) if tm else 1
+                subs = [(s, trip) for _r, s in
+                        re.findall(r"(body|condition)=%([\w.\-]+)", ins.rest)]
+            elif ins.op in ("call",):
+                cm2 = _CALL_RE.search(ins.rest)
+                if cm2:
+                    subs = [(cm2.group(1), 1)]
+            elif ins.op == "conditional":
+                bm = _BRANCH_RE.search(ins.rest)
+                if bm:
+                    subs = [(s, 1) for s in _OPERAND_RE.findall(bm.group(1))]
+            for sub, k in subs:
+                mult[sub] = max(mult.get(sub, 0.0), scale * k)
+                if sub not in seen:
+                    seen.add(sub)
+                    order.append(sub)
+
+    rows = []
+    for cname, m in mult.items():
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            if ins.op in _NO_TRAFFIC or ins.op.endswith("-done"):
+                continue
+            t = _instr_traffic(comp, ins)
+            meta = ""
+            mm = re.search(r'op_name="([^"]*)"', ins.rest)
+            if mm:
+                meta = mm.group(1)[-90:]
+            rows.append((t * m, m, ins.op, ins.shape[:60], meta))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:n]
+
+
+if __name__ == "__main__":
+    import sys
+    with open(sys.argv[1]) as f:
+        text = f.read()
+    print(json.dumps(analyze(text), indent=2))
+    if len(sys.argv) > 2 and sys.argv[2] == "--top":
+        for t, m, op, shape, meta in top_traffic(text):
+            print(f"{t / 1e9:10.2f} GB x{int(m):5d} {op:18s} {shape:60s} {meta}")

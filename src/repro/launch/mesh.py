@@ -1,0 +1,26 @@
+"""Production mesh builders.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.  Target: TPU v5e, 256 chips/pod,
+(data=16, model=16); multi-pod adds a leading pod axis (2 pods = 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests/examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# v5e hardware constants used by the roofline analysis (benchmarks/roofline)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link

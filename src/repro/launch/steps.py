@@ -1,0 +1,234 @@
+"""Step builders for the dry-run and real training/serving.
+
+For each (arch x input shape) this module produces:
+  * the step function (federated train round / prefill / decode),
+  * ShapeDtypeStruct input specs (no allocation),
+  * in/out shardings on a given mesh.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core.fed_step import make_fed_round
+from repro.models import transformer
+from repro.models.params import init_params
+from repro.models.sharding import named_sharding, tree_param_specs
+
+BATCH = ("pod", "data")
+
+
+def _batch_axes(B: int, mesh):
+    """Largest prefix of (pod, data) whose product divides B (long_500k has
+    B=1 and must replicate)."""
+    axes = [a for a in BATCH if a in mesh.shape]
+    while axes:
+        if B % int(np.prod([mesh.shape[a] for a in axes])) == 0:
+            return tuple(axes)
+        axes.pop(0)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Parameter shapes without allocation
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def param_bytes(cfg: ArchConfig) -> int:
+    ap = abstract_params(cfg)
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(ap))
+
+
+def serve_fsdp(cfg: ArchConfig) -> bool:
+    """Shard serve-time params over the data axis too when a model-only
+    (16-way) shard would not leave room for the KV cache."""
+    return param_bytes(cfg) / 16 > 6e9
+
+
+# ---------------------------------------------------------------------------
+# Train (federated round) step
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StepBundle:
+    fn: Callable
+    input_specs: Tuple          # ShapeDtypeStruct args (after params)
+    in_shardings: Tuple         # matching shardings (params first)
+    out_shardings: Any
+    donate: Tuple = ()
+    meta: Dict = None
+
+
+def _token_struct(cfg, shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def make_train_step(cfg: ArchConfig, shape: InputShape, mesh) -> StepBundle:
+    fed = cfg.fed
+    parallel = fed.mode == "client_parallel"
+    # client_parallel fills the client axis across pod*data; sequential uses
+    # the configured clients_per_round and shards each client's batch.
+    if parallel:
+        C = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                         if a in mesh.shape]))
+    else:
+        C = fed.clients_per_round
+    E = fed.local_epochs
+    b = max(1, shape.global_batch // C)
+    S = shape.seq_len
+    S_text = S - cfg.n_patches if cfg.n_patches else S
+
+    tok_shape = (C, E, b, S_text)
+    if cfg.n_codebooks:
+        tok_shape = tok_shape + (cfg.n_codebooks,)
+    batch_specs = {
+        "tokens": _token_struct(cfg, tok_shape),
+        "labels": _token_struct(cfg, tok_shape),
+    }
+    client_axes = BATCH if parallel else None
+    bdim_axes = None if parallel else BATCH
+    tok_spec = P(client_axes, None, bdim_axes, *([None] * (len(tok_shape) - 3)))
+    batch_shard = {"tokens": tok_spec, "labels": tok_spec}
+    if cfg.n_patches:
+        batch_specs["patch_emb"] = jax.ShapeDtypeStruct(
+            (C, E, b, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+        batch_shard["patch_emb"] = P(client_axes, None, bdim_axes, None, None)
+
+    loss_fn = functools.partial(_arch_loss, cfg)
+    round_fn = make_fed_round(loss_fn, fed.mode)
+
+    def step(params, batches, alpha, coeffs, eta):
+        return round_fn(params, batches, alpha, coeffs, eta)
+
+    aparams = abstract_params(cfg)
+    pspecs = tree_param_specs(aparams, fsdp=not parallel)
+    ns = lambda spec: named_sharding(mesh, spec)
+    in_shardings = (
+        jax.tree.map(ns, pspecs),
+        jax.tree.map(lambda s: ns(s), batch_shard),
+        ns(P(client_axes, None)),
+        ns(P(client_axes)),
+        ns(P()),
+    )
+    input_specs = (
+        aparams,
+        batch_specs,
+        jax.ShapeDtypeStruct((C, E), jnp.float32),
+        jax.ShapeDtypeStruct((C,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    out_shardings = (jax.tree.map(ns, pspecs), None)
+    return StepBundle(step, input_specs, in_shardings, out_shardings,
+                      meta={"clients": C, "local_epochs": E,
+                            "client_batch": b, "mode": fed.mode})
+
+
+def _arch_loss(cfg, params, batch):
+    return transformer.train_loss(params, cfg, batch)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps (prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _cache_sharding_tree(cfg, cache_struct, mesh, baxes):
+    """Cache leaves: (L, B, slots, ...) — batch over `baxes`; kv dim over
+    'model' for GQA; MLA compressed cache shards slots over 'model'."""
+    ns = lambda spec: named_sharding(mesh, spec)
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(leaf.shape)
+        if name in ("k", "v"):  # (L, B, slots, KV*hd) flattened kv dim
+            return ns(P(None, baxes, None, "model"))
+        if name == "ckv" or name == "krope":
+            return ns(P(None, baxes, "model", None))
+        if name == "pos_map":
+            return ns(P(None, None))
+        if name == "conv":
+            return ns(P(None, baxes, None, "model"))
+        if name == "state":  # (L, B, G, hg, P, N): head_dim over model
+            return ns(P(None, baxes, None, None, "model", None))
+        return ns(P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_struct)
+
+
+def make_decode_step(cfg: ArchConfig, shape: InputShape, mesh) -> StepBundle:
+    B, S = shape.global_batch, shape.seq_len
+    baxes = _batch_axes(B, mesh)
+
+    def step(params, cache, token, pos):
+        return transformer.decode_step(params, cfg, cache, token, pos)
+
+    aparams = abstract_params(cfg)
+    pspecs = tree_param_specs(aparams, fsdp=serve_fsdp(cfg))
+    cache_struct = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, S))
+    cache_shard = _cache_sharding_tree(cfg, cache_struct, mesh, baxes)
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks else (B, 1)
+    ns = lambda spec: named_sharding(mesh, spec)
+    in_shardings = (
+        jax.tree.map(ns, pspecs),
+        cache_shard,
+        ns(P(baxes, *([None] * (len(tok_shape) - 1)))),
+        ns(P()),
+    )
+    input_specs = (
+        aparams,
+        cache_struct,
+        jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    out_shardings = (None, cache_shard)
+    return StepBundle(step, input_specs, in_shardings, out_shardings,
+                      meta={"batch": B, "cache_len": S})
+
+
+def make_prefill_step(cfg: ArchConfig, shape: InputShape, mesh) -> StepBundle:
+    B, S = shape.global_batch, shape.seq_len
+    baxes = _batch_axes(B, mesh)
+    S_text = S - cfg.n_patches if cfg.n_patches else S
+
+    def step(params, tokens, patch_emb=None):
+        cache = transformer.init_cache(cfg, B, S)
+        return transformer.prefill(params, cfg, tokens, cache,
+                                   patch_emb=patch_emb)
+
+    aparams = abstract_params(cfg)
+    pspecs = tree_param_specs(aparams, fsdp=serve_fsdp(cfg))
+    tok_shape = (B, S_text, cfg.n_codebooks) if cfg.n_codebooks \
+        else (B, S_text)
+    ns = lambda spec: named_sharding(mesh, spec)
+    in_shardings = [jax.tree.map(ns, pspecs),
+                    ns(P(baxes, None, *([None] * (len(tok_shape) - 2))))]
+    input_specs = [aparams, jax.ShapeDtypeStruct(tok_shape, jnp.int32)]
+    if cfg.n_patches:
+        input_specs.append(jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype)))
+        in_shardings.append(ns(P(baxes, None, None)))
+    return StepBundle(step, tuple(input_specs), tuple(in_shardings), None,
+                      meta={"batch": B, "seq": S})
+
+
+def make_step(cfg: ArchConfig, shape: InputShape, mesh) -> StepBundle:
+    if shape.kind == "train":
+        return make_train_step(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape, mesh)
+    return make_decode_step(cfg, shape, mesh)

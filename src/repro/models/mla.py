@@ -1,0 +1,100 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3, arXiv:2405.04434).
+
+Train/prefill run the decompressed path (materialise per-head k,v from the
+compressed latent).  Decode runs the *absorbed* path: queries are projected
+into the kv_lora latent space and attention runs directly against the
+compressed cache — the cache holds only (kv_lora + qk_rope) per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import NEG_INF, causal_attention, _mask_bias
+from repro.models.common import rmsnorm
+from repro.models.rotary import apply_rope
+from repro.models.sharding import BATCH, constrain
+
+
+def _project_q(p, x, cfg, positions):
+    B, S = x.shape[0], x.shape[1]
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = x @ p["w_dq"]
+        cq = rmsnorm(cq, p["q_ln"]["scale"], cfg.norm_eps)
+        q = (cq @ p["w_uq"]).reshape(B, S, cfg.n_heads, qk)
+    else:
+        q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, qk)
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _compress_kv(p, x, cfg, positions):
+    ckv_full = x @ p["w_dkv"]                     # (B,S,kv_lora+rope)
+    c_kv = rmsnorm(ckv_full[..., : cfg.kv_lora_rank], p["kv_ln"]["scale"],
+                   cfg.norm_eps)
+    k_rope = ckv_full[..., cfg.kv_lora_rank:]     # shared single rope head
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(p, x, cfg, positions, cache=None, decode=False):
+    """Returns (out, updated_cache_or_None).
+
+    cache (per layer): {"ckv": (B,Slots,kv_lora), "krope": (B,Slots,rope),
+                        "pos_map": (Slots,)}.
+    """
+    B, S = x.shape[0], x.shape[1]
+    H = cfg.n_heads
+    q_nope, q_rope = _project_q(p, x, cfg, positions)
+    c_kv, k_rope = _compress_kv(p, x, cfg, positions)
+    scale = 1.0 / jnp.sqrt(float(cfg.qk_nope_dim + cfg.qk_rope_dim))
+    w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, H, cfg.qk_nope_dim)
+    w_uv = p["w_uv"].reshape(cfg.kv_lora_rank, H, cfg.v_head_dim)
+
+    if decode:
+        assert cache is not None
+        slots = cache["ckv"].shape[1]
+        pos = positions[0]
+        slot = (pos % slots).astype(jnp.int32)
+        ckv_c = cache["ckv"].at[:, slot].set(c_kv[:, 0])
+        kr_c = cache["krope"].at[:, slot].set(k_rope[:, 0])
+        pos_map = cache["pos_map"].at[slot].set(pos.astype(jnp.int32))
+        # absorbed path: q into latent space
+        q_abs = jnp.einsum("bthn,lhn->bthl", q_nope, w_uk)
+        s = (jnp.einsum("bthl,bsl->bhts", q_abs, ckv_c,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bthr,bsr->bhts", q_rope, kr_c,
+                          preferred_element_type=jnp.float32)) * scale
+        valid = (pos_map >= 0) & (pos_map <= pos)
+        s = s + _mask_bias(valid)[None, None, None, :]
+        w = jax.nn.softmax(s, axis=-1).astype(ckv_c.dtype)
+        ctx = jnp.einsum("bhts,bsl->bthl", w, ckv_c)
+        o = jnp.einsum("bthl,lhv->bthv", ctx, w_uv)
+        new_cache = {"ckv": ckv_c, "krope": kr_c, "pos_map": pos_map}
+    else:
+        # decompressed path
+        k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, cfg.qk_nope_dim)
+        v = (c_kv @ p["w_uv"]).reshape(B, S, H, cfg.v_head_dim)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, k_rope.shape[-1]))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q = constrain(q, P(BATCH, None, "model", None))
+        k = constrain(k, P(BATCH, None, "model", None))
+        v = constrain(v, P(BATCH, None, "model", None))
+        o = causal_attention(q, k, v, remat_chunks=cfg.remat_attention)
+        new_cache = None
+        if cache is not None:  # prefill
+            write_slots = positions.astype(jnp.int32)
+            ckv_c = cache["ckv"].at[:, write_slots].set(c_kv)
+            kr_c = cache["krope"].at[:, write_slots].set(k_rope)
+            pm = cache["pos_map"].at[write_slots].set(
+                positions.astype(jnp.int32))
+            new_cache = {"ckv": ckv_c, "krope": kr_c, "pos_map": pm}
+    out = o.reshape(B, o.shape[1], H * cfg.v_head_dim) @ p["wo"]
+    return out, new_cache

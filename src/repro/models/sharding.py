@@ -1,0 +1,175 @@
+"""Mesh context + PartitionSpec rules.
+
+The model code is mesh-agnostic: ``constrain(x, spec)`` is a no-op unless a
+mesh has been installed with ``use_mesh``.  Param specs are derived from the
+pytree path names, so one rule table covers every architecture family.
+
+Axis roles (see DESIGN.md §2.1):
+  pod    — multi-pod client/data parallelism (outermost)
+  data   — client parallelism (fed) / batch (serve) / FSDP shard axis
+  model  — tensor parallelism: heads, d_ff, vocab, experts, d_inner
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Install `mesh` as the ambient mesh for constrain()/named_sharding().
+    All shardings are explicit NamedShardings, so no jax-global context is
+    required."""
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint if a mesh is active, else identity."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = _filter_spec(spec, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _filter_spec(spec: P, mesh: Mesh) -> P:
+    """Drop axis names not present in the mesh (e.g. 'pod' on single-pod)."""
+    names = set(mesh.axis_names)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(keep(e) for e in spec))
+
+
+def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, _filter_spec(spec, mesh))
+
+
+# Batch-like dims (clients, batch) shard over pod+data.
+BATCH = ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules, keyed by leaf path fragments.
+# ---------------------------------------------------------------------------
+
+
+def param_spec(path: str, ndim: int, *, fsdp: bool, stacked: bool) -> P:
+    """PartitionSpec for a parameter leaf.
+
+    path     -- '/'-joined pytree path, e.g. 'blocks/attn/wq'.
+    stacked  -- leaf has a leading (n_layers,) scan dim.
+    fsdp     -- additionally shard the non-TP big dim over ('data',) ('pod'
+                included when present; filtered per-mesh at constrain time).
+    """
+    name = path.split("/")[-1]
+    d_ax = ("pod", "data") if fsdp else None  # FSDP axis for the d_model dim
+
+    def spec(*entries):
+        entries = list(entries)
+        # pad to ndim (minus stack dim) with None
+        body = ndim - (1 if stacked else 0)
+        while len(entries) < body:
+            entries.append(None)
+        if stacked:
+            entries = [None] + entries
+        return P(*entries)
+
+    # --- attention (flattened (d, H*hd) projections) ---
+    if name in ("wq", "wk", "wv"):
+        return spec(d_ax, "model")
+    if name == "wo":
+        return spec("model", d_ax)
+    if name in ("bq", "bk", "bv"):
+        return spec("model")
+    if name == "bo":
+        return spec(None)
+    # --- MLA (flattened (rank, H*dim) up-projections) ---
+    if name in ("w_dq", "w_dkv"):
+        return spec(d_ax, None)
+    if name in ("w_uq", "w_uk", "w_uv"):
+        return spec(None, "model")
+    # --- MLP ---
+    if name in ("w_gate", "w_up"):
+        if ndim - (1 if stacked else 0) == 3:  # experts (E, d, f)
+            return spec("model", d_ax, None)
+        return spec(d_ax, "model")
+    if name == "w_down":
+        if ndim - (1 if stacked else 0) == 3:  # experts (E, f, d)
+            return spec("model", None, d_ax)
+        return spec("model", d_ax)
+    if name == "b_up":
+        return spec("model")
+    if name == "b_down":
+        return spec(None)
+    if name in ("router", "router_bias"):
+        return spec(None)
+    # --- SSM ---
+    if name in ("in_z", "in_x"):
+        return spec(d_ax, "model")
+    if name in ("in_B", "in_C", "in_dt"):
+        return spec(d_ax, None)
+    if name in ("conv_w", "conv_b"):
+        return spec(None, "model") if ndim - (1 if stacked else 0) == 2 else spec("model")
+    if name in ("A_log", "D", "dt_bias"):
+        return spec(None)
+    if name == "ssm_norm":
+        return spec("model")
+    if name == "out_proj":
+        return spec("model", d_ax)
+    # --- embeddings / heads ---
+    if name == "embed":
+        # (V, d) or (K, V, d) for audio codebooks
+        if ndim == 3:
+            return P(None, "model", None)
+        return P("model", None)
+    if name == "lm_head":
+        # (d, V) or (K, d, V)
+        if ndim == 3:
+            return P(None, None, "model")
+        return P(None, "model")
+    if name == "patch_proj":
+        return spec(d_ax, None)
+    if name == "mtp_proj":
+        return spec(d_ax, None)
+    # --- norms, scalars, everything else: replicated ---
+    return P(*([None] * ndim))
+
+
+def tree_param_specs(params, *, fsdp: bool):
+    """Build a pytree of PartitionSpec matching ``params``.
+
+    Any subtree whose key ends with 'blocks' holds per-layer stacked leaves
+    (leading (n_layers,) scan dim).
+    """
+
+    def walk(tree, prefix, stacked):
+        if isinstance(tree, dict):
+            return {
+                k: walk(v, f"{prefix}/{k}" if prefix else k,
+                        stacked or k.endswith("blocks"))
+                for k, v in tree.items()
+            }
+        return param_spec(prefix, tree.ndim, fsdp=fsdp, stacked=stacked)
+
+    return walk(params, "", False)

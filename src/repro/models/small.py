@@ -1,0 +1,82 @@
+"""The paper's experiment models (McMahan et al. 2016 MLP/CNN + logistic
+regression for SYNTHETIC).  Pure-jnp, used by the federated driver."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper import PaperModelConfig
+
+
+def init_small(key, cfg: PaperModelConfig):
+    ks = jax.random.split(key, 6)
+    if cfg.kind == "logreg":
+        d = cfg.input_shape[0]
+        return {"w": 0.01 * jax.random.normal(ks[0], (d, cfg.n_classes)),
+                "b": jnp.zeros((cfg.n_classes,))}
+    if cfg.kind == "mlp":
+        d = int(jnp.prod(jnp.asarray(cfg.input_shape)))
+        h = cfg.hidden
+        return {
+            "w1": jax.random.normal(ks[0], (d, h)) * jnp.sqrt(2.0 / d),
+            "b1": jnp.zeros((h,)),
+            "w2": jax.random.normal(ks[1], (h, cfg.n_classes)) * jnp.sqrt(2.0 / h),
+            "b2": jnp.zeros((cfg.n_classes,)),
+        }
+    if cfg.kind == "cnn":
+        return {
+            "c1": jax.random.normal(ks[0], (5, 5, 1, 32)) * 0.1,
+            "cb1": jnp.zeros((32,)),
+            "c2": jax.random.normal(ks[1], (5, 5, 32, 64)) * 0.05,
+            "cb2": jnp.zeros((64,)),
+            "w1": jax.random.normal(ks[2], (7 * 7 * 64, 128)) * 0.02,
+            "b1": jnp.zeros((128,)),
+            "w2": jax.random.normal(ks[3], (128, cfg.n_classes)) * 0.05,
+            "b2": jnp.zeros((cfg.n_classes,)),
+        }
+    raise ValueError(cfg.kind)
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def logits_small(params, cfg: PaperModelConfig, x):
+    if cfg.kind == "logreg":
+        return x @ params["w"] + params["b"]
+    if cfg.kind == "mlp":
+        xf = x.reshape(x.shape[0], -1)
+        h = jax.nn.relu(xf @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"]
+    # cnn
+    x = x.reshape(x.shape[0], 28, 28, 1)
+    h = jax.nn.relu(_conv(x, params["c1"], params["cb1"]))
+    h = _pool(h)
+    h = jax.nn.relu(_conv(h, params["c2"], params["cb2"]))
+    h = _pool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def make_loss_fn(cfg: PaperModelConfig):
+    def loss_fn(params, batch):
+        x, y = batch["x"], batch["y"]
+        lg = logits_small(params, cfg, x)
+        ll = jax.nn.log_softmax(lg)
+        return -jnp.mean(jnp.take_along_axis(
+            ll, y[:, None].astype(jnp.int32), axis=1))
+    return loss_fn
+
+
+def accuracy(params, cfg: PaperModelConfig, x, y):
+    lg = logits_small(params, cfg, x)
+    return jnp.mean((jnp.argmax(lg, -1) == y).astype(jnp.float32))

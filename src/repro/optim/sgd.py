@@ -1,0 +1,52 @@
+"""Optimizers.  The paper's federated path uses vanilla SGD with the
+staircase learning rate (local steps live in core.fed_step); AdamW is
+provided for the non-federated training utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def staircase_lr(eta0: float, tau, tau0=0):
+    return eta0 / jnp.maximum(jnp.asarray(tau - tau0, jnp.float32), 1.0)
+
+
+def sgd_step(params, grads, eta, momentum_state=None, momentum: float = 0.0):
+    if momentum and momentum_state is not None:
+        momentum_state = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            momentum_state, grads)
+        params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - eta * m).astype(p.dtype),
+            params, momentum_state)
+        return params, momentum_state
+    params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - eta * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return params, momentum_state
+
+
+def adamw_init(params):
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.int32(0)}
+
+
+def adamw_step(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8,
+               wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                     * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return (p.astype(jnp.float32)
+                - lr * (step + wd * p.astype(jnp.float32))).astype(p.dtype)
+
+    return (jax.tree.map(upd, params, m, v),
+            {"m": m, "v": v, "t": t})

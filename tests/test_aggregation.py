@@ -1,0 +1,94 @@
+"""Scheme A/B/C coefficient math + the paper's debiasing property."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (expected_coeff_stats,
+                                    scheme_coefficients, theta_bound)
+
+E = 5
+
+
+def test_scheme_a_only_complete_devices():
+    p = jnp.asarray([0.5, 0.3, 0.2])
+    s = jnp.asarray([5.0, 3.0, 5.0])
+    c = np.asarray(scheme_coefficients("A", p, s, E))
+    assert c[1] == 0.0
+    # N p^k / K for the two complete devices
+    np.testing.assert_allclose(c[0], 3 * 0.5 / 2)
+    np.testing.assert_allclose(c[2], 3 * 0.2 / 2)
+
+
+def test_scheme_a_no_complete_devices_drops_round():
+    p = jnp.asarray([0.5, 0.5])
+    s = jnp.asarray([3.0, 0.0])
+    c = np.asarray(scheme_coefficients("A", p, s, E))
+    np.testing.assert_allclose(c, 0.0)
+
+
+def test_scheme_b_fixed_coefficients():
+    p = jnp.asarray([0.6, 0.4])
+    s = jnp.asarray([2.0, 5.0])
+    c = np.asarray(scheme_coefficients("B", p, s, E))
+    np.testing.assert_allclose(c, [0.6, 0.4])
+
+
+def test_scheme_c_rescales_incomplete():
+    p = jnp.asarray([0.5, 0.25, 0.25])
+    s = jnp.asarray([5.0, 1.0, 0.0])
+    c = np.asarray(scheme_coefficients("C", p, s, E))
+    np.testing.assert_allclose(c, [0.5, E * 0.25, 0.0])
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 10), seed=st.integers(0, 10**6))
+def test_scheme_c_satisfies_theta_bound(n, seed):
+    """Assumption 3.5: p_tau^k / p^k <= theta for every scheme."""
+    rng = np.random.default_rng(seed)
+    p = rng.dirichlet(np.ones(n))
+    s = rng.integers(0, E + 1, n).astype(float)
+    for scheme in "ABC":
+        c = np.asarray(scheme_coefficients(scheme, jnp.asarray(p),
+                                           jnp.asarray(s), E))
+        th = theta_bound(scheme, n, E)
+        assert np.all(c <= th * p + 1e-6), (scheme, c, p)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_scheme_c_unbiased_ratio_heterogeneous(seed):
+    """The paper's key property (App. A.4.3): under Scheme C,
+    E[p_tau^k s_tau^k] / p^k == E for every ACTIVE client regardless of its
+    participation distribution => z_tau = 0 when no client is fully
+    inactive.  Schemes A/B break this under heterogeneity."""
+    rng = np.random.default_rng(seed)
+    n = 4
+    p = rng.dirichlet(np.ones(n))
+    # heterogeneous, never-inactive distributions per client
+    probs = rng.uniform(0.2, 1.0, size=n)
+
+    def sampler(r):
+        return np.maximum(r.binomial(E, probs), 1)
+
+    stats_c = expected_coeff_stats("C", p, sampler, E, n_rounds=400,
+                                   seed=seed)
+    np.testing.assert_allclose(stats_c["ratio"], E, rtol=1e-6)
+    assert stats_c["z"] == 0.0
+
+    stats_b = expected_coeff_stats("B", p, sampler, E, n_rounds=400,
+                                   seed=seed)
+    # heterogeneous means E[s^k] differ across clients -> biased
+    if np.std(probs) > 0.1:
+        assert stats_b["z"] == 1.0
+
+
+def test_scheme_b_homogeneous_unbiased():
+    rng = np.random.default_rng(0)
+    p = np.array([0.25, 0.25, 0.25, 0.25])
+
+    def sampler(r):
+        return np.maximum(r.binomial(E, 0.6, size=4), 1)
+
+    stats = expected_coeff_stats("B", p, sampler, E, n_rounds=3000)
+    assert stats["z"] == 0.0 or np.std(stats["ratio"]) < 0.1

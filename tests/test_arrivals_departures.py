@@ -1,0 +1,116 @@
+"""Fast-reboot (Cor. 4.0.2) and departure applicability (Cor. 4.0.3) on
+closed-form quadratics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import scheme_coefficients
+from repro.core.arrivals import RebootState, shift_weights_arrival, staircase_lr
+from repro.core.departures import (BoundTerms, crossing_round,
+                                   shift_weights_departure, should_exclude)
+from repro.core.fed_step import make_fed_round
+from repro.core.theory import (objective_shift_offset,
+                               quadratic_problem_constants)
+
+E = 4
+DIM = 4
+
+
+def build(seed, n):
+    rng = np.random.default_rng(seed)
+    A_list = [np.eye(DIM) * rng.uniform(0.8, 1.2) for _ in range(n)]
+    c_list = [rng.normal(0, 2.0, DIM) for _ in range(n)]
+    n_k = np.ones(n) * 100
+    p = n_k / n_k.sum()
+    return A_list, c_list, p
+
+
+def fed_train(A_list, c_list, p, w0, rounds, eta0=0.5, boost=None,
+              tau0=0, seed=0):
+    A = jnp.asarray(np.stack(A_list))
+    c = jnp.asarray(np.stack(c_list))
+    N = len(A_list)
+
+    def loss_fn(params, batch):
+        k = batch["client"][0]
+        d = params["w"] - c[k]
+        return 0.5 * d @ A[k] @ d
+
+    round_fn = jax.jit(make_fed_round(loss_fn, "client_parallel"))
+    params = {"w": jnp.asarray(w0)}
+    alpha = np.ones((N, E), np.float32)
+    batches = {"client": jnp.asarray(
+        np.tile(np.arange(N)[:, None, None], (1, E, 1)))}
+    s = np.full(N, E, np.float32)
+    traj = []
+    for tau in range(rounds):
+        coeffs = np.array(scheme_coefficients("C", jnp.asarray(p),
+                                                jnp.asarray(s), E))
+        if boost is not None:
+            coeffs[-1] *= boost.coeff_multiplier(tau0 + tau)
+        eta = staircase_lr(eta0, tau0 + tau + 1, tau0)
+        params, _ = round_fn(params, batches, jnp.asarray(alpha),
+                             jnp.asarray(coeffs), jnp.float32(eta))
+        traj.append(np.asarray(params["w"]).copy())
+    return np.asarray(traj)
+
+
+def test_fast_reboot_accelerates_late_arrival():
+    """A device arriving late (model near old optimum): boosted coefficient
+    moves the model toward the NEW optimum faster (Cor. 4.0.2)."""
+    A_list, c_list, p = build(0, 5)
+    # old objective: first 4 devices
+    pc_old, w_old = quadratic_problem_constants(A_list[:4], c_list[:4],
+                                                p[:4] / p[:4].sum())
+    pc_new, w_new = quadratic_problem_constants(A_list, c_list, p)
+    # start AT the old optimum (late arrival, b ~= 0)
+    traj_boost = fed_train(A_list, c_list, p, w_old, rounds=12,
+                           boost=RebootState(0, 4, boost=3.0), tau0=40)
+    traj_plain = fed_train(A_list, c_list, p, w_old, rounds=12, tau0=40)
+    d_boost = np.linalg.norm(traj_boost - w_new, axis=1)
+    d_plain = np.linalg.norm(traj_plain - w_new, axis=1)
+    # boosted run gets closer to the new optimum in early rounds
+    assert d_boost[3] < d_plain[3], (d_boost[:5], d_plain[:5])
+    assert d_boost[6] < d_plain[6]
+
+
+def test_objective_shift_bound_holds():
+    """Theorem 3.2: ||w* - w~*|| within the analytic bound."""
+    A_list, c_list, p = build(1, 5)
+    pc_old, w_old = quadratic_problem_constants(A_list[:4], c_list[:4],
+                                                p[:4] / p[:4].sum())
+    pc_new, w_new = quadratic_problem_constants(A_list, c_list, p)
+    gamma_l = float(0.5 * (w_old - c_list[4]) @ A_list[4] @ (w_old - c_list[4]))
+    bound = objective_shift_offset(pc_new.L, pc_new.mu, 100.0, 400.0,
+                                   gamma_l, arrival=True)
+    assert np.linalg.norm(w_new - w_old) <= bound + 1e-8
+
+
+def test_departure_rule_prefers_exclude_with_time_left():
+    terms = BoundTerms(D=5.0, V=20.0, gamma=10.0, E=E)
+    # leaves early, lots of time left -> exclude
+    assert should_exclude(T=500, tau0=10, terms=terms, gamma_l=1.0)
+    # leaves at the very end -> include
+    assert not should_exclude(T=500, tau0=499, terms=terms, gamma_l=1.0)
+
+
+def test_crossing_round_grows_with_noniid_and_tau0():
+    """Table 5 trends: crossing time increases with Gamma_l and tau0."""
+    terms = BoundTerms(D=5.0, V=20.0, gamma=10.0, E=E)
+    c_small = crossing_round(2000, 50, terms, gamma_l=0.5)
+    c_large = crossing_round(2000, 50, terms, gamma_l=5.0)
+    assert c_small is not None and c_large is not None
+    assert c_large >= c_small
+    c_early = crossing_round(2000, 20, terms, gamma_l=1.0)
+    c_late = crossing_round(2000, 200, terms, gamma_l=1.0)
+    assert (c_late - 200) >= (c_early - 20)
+
+
+def test_shift_weights():
+    n = np.array([100.0, 200.0, 100.0])
+    w_arr = shift_weights_arrival(n, 100.0)
+    np.testing.assert_allclose(w_arr.sum(), 1.0)
+    np.testing.assert_allclose(w_arr[-1], 0.2)
+    w_dep = shift_weights_departure(n, 1)
+    np.testing.assert_allclose(w_dep, [0.5, 0.5])

@@ -1,0 +1,85 @@
+"""Invariants of the jitted federated round (Eq. 1–2), property-tested."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fed_step import local_sgd, make_fed_round
+
+DIM = 5
+E = 3
+C = 4
+
+
+def _loss(params, batch):
+    return 0.5 * jnp.sum(jnp.square(params["w"] - batch["c"][0]))
+
+
+def _batches(rng):
+    return {"c": jnp.asarray(rng.normal(size=(C, E, 1, DIM)), jnp.float32)}
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_zero_alpha_is_identity(seed):
+    """All-inactive round: w unchanged regardless of coefficients."""
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=DIM), jnp.float32)}
+    alpha = jnp.zeros((C, E))
+    coeffs = jnp.asarray(rng.uniform(0, 2, C), jnp.float32)
+    out, _ = make_fed_round(_loss, "client_parallel")(
+        params, _batches(rng), alpha, coeffs, jnp.float32(0.1))
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(params["w"]), atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_zero_coeffs_is_identity(seed):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=DIM), jnp.float32)}
+    alpha = jnp.ones((C, E))
+    out, _ = make_fed_round(_loss, "client_parallel")(
+        params, _batches(rng), alpha, jnp.zeros(C), jnp.float32(0.1))
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(params["w"]), atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_aggregation_is_linear_in_coefficients(seed):
+    """Eq. (2): the round update is linear in p_tau^k — the delta from a
+    coefficient vector c1+c2 equals the sum of the individual deltas."""
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=DIM), jnp.float32)}
+    batches = _batches(rng)
+    alpha = jnp.asarray((rng.random((C, E)) < 0.7).astype(np.float32))
+    c1 = jnp.asarray(rng.uniform(0, 1, C), jnp.float32)
+    c2 = jnp.asarray(rng.uniform(0, 1, C), jnp.float32)
+    rf = make_fed_round(_loss, "client_parallel")
+    eta = jnp.float32(0.05)
+    w0 = params["w"]
+    d1 = rf(params, batches, alpha, c1, eta)[0]["w"] - w0
+    d2 = rf(params, batches, alpha, c2, eta)[0]["w"] - w0
+    d12 = rf(params, batches, alpha, c1 + c2, eta)[0]["w"] - w0
+    np.testing.assert_allclose(np.asarray(d12), np.asarray(d1 + d2),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_masked_steps_match_truncated_run(seed):
+    """Equivalent view (App. A.1.1): a client with prefix mask s equals a
+    client literally running only s local steps."""
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=DIM), jnp.float32)}
+    batch = {"c": jnp.asarray(rng.normal(size=(E, 1, DIM)), jnp.float32)}
+    s = int(rng.integers(1, E + 1))
+    alpha = jnp.asarray((np.arange(E) < s).astype(np.float32))
+    eta = jnp.float32(0.05)
+    delta_masked = local_sgd(_loss, params, batch, alpha, eta)
+    batch_s = {"c": batch["c"][:s]}
+    delta_trunc = local_sgd(_loss, params, batch_s, jnp.ones(s), eta)
+    np.testing.assert_allclose(np.asarray(delta_masked["w"]),
+                               np.asarray(delta_trunc["w"]),
+                               rtol=1e-5, atol=1e-6)

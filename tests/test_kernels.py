@@ -1,0 +1,137 @@
+"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("K", [1, 3, 8, 32])
+@pytest.mark.parametrize("D", [64, 1000, 4096, 10001])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_weighted_agg_matches_ref(K, D, dtype):
+    k1, k2 = jax.random.split(KEY)
+    c = jax.random.uniform(k1, (K,), jnp.float32)
+    d = jax.random.normal(k2, (K, D), dtype)
+    got = ops.weighted_agg(c, d)
+    want = ref.weighted_agg_ref(c, d)
+    np.testing.assert_allclose(got, want, rtol=2e-2 if dtype == jnp.bfloat16
+                               else 1e-6, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(K=st.integers(1, 16), D=st.integers(1, 3000),
+       block=st.sampled_from([128, 512, 2048]))
+def test_weighted_agg_property(K, D, block):
+    rng = np.random.default_rng(K * 1000 + D)
+    c = jnp.asarray(rng.uniform(0, 2, K), jnp.float32)
+    d = jnp.asarray(rng.normal(size=(K, D)), jnp.float32)
+    got = ops.weighted_agg(c, d, block=block)
+    want = ref.weighted_agg_ref(c, d)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("D", [128, 5000, 16384])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("alpha", [0.0, 1.0])
+def test_masked_sgd_matches_ref(D, dtype, alpha):
+    k1, k2 = jax.random.split(KEY)
+    w = jax.random.normal(k1, (D,), dtype)
+    g = jax.random.normal(k2, (D,), dtype)
+    ea = jnp.float32(0.05 * alpha)
+    got = ops.masked_sgd(w, g, ea)
+    want = ref.masked_sgd_ref(w, g, ea)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-6,
+                               atol=1e-5)
+
+
+def test_masked_sgd_zero_alpha_is_identity():
+    w = jax.random.normal(KEY, (999,))
+    g = jax.random.normal(KEY, (999,))
+    out = ops.masked_sgd(w, g, jnp.float32(0.0))
+    np.testing.assert_allclose(out, w)
+
+
+@pytest.mark.parametrize("B,H,KV,S,hd", [
+    (1, 2, 2, 128, 64),
+    (2, 4, 2, 256, 64),
+    (1, 4, 1, 384, 128),   # MQA, non-pow2 blocks coverage
+    (2, 2, 2, 100, 32),    # padded seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, H, KV, S, hd, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), dtype)
+    got = ops.flash_attention(q, k, v)
+    kr = jnp.repeat(k, H // KV, 1)
+    vr = jnp.repeat(v, H // KV, 1)
+    want = ref.flash_attention_ref(q, kr, vr)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 2e-5,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64))
+    k = jax.random.normal(ks[1], (1, 2, 128, 64))
+    v = jax.random.normal(ks[2], (1, 2, 128, 64))
+    got = ops.flash_attention(q, k, v, causal=False)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("Q,N,P", [(16, 8, 8), (64, 32, 16), (128, 64, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_intra_chunk_matches_ref(Q, N, P, dtype):
+    rng = np.random.default_rng(Q + N)
+    G = 6
+    cum = jnp.asarray(np.cumsum(
+        -rng.uniform(0.01, 0.1, (G, Q)), axis=-1), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(G, Q, N)), dtype)
+    B = jnp.asarray(rng.normal(size=(G, Q, N)), dtype)
+    x = jnp.asarray(rng.normal(size=(G, Q, P)), dtype)
+    got = ops.ssd_intra_chunk(cum, C, B, x)
+    want = ref.ssd_intra_chunk_ref(cum, C, B, x)
+    if dtype == jnp.bfloat16:
+        # scores are cast to bf16 for the second MXU matmul (TPU-realistic);
+        # tolerance scales with the Q-term accumulation magnitude
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=6e-2, atol=0.4)
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_intra_chunk_matches_model_ssd():
+    """The kernel reproduces models/ssd.ssd_chunked's intra-chunk term:
+    single chunk, zero initial state => whole output is intra-chunk."""
+    from repro.models.ssd import ssd_chunked
+    rng = np.random.default_rng(0)
+    Bb, S, H, P, N = 1, 32, 2, 8, 4   # one chunk of Q=S, G=H groups
+    x = jnp.asarray(rng.normal(size=(Bb, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (Bb, S, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(Bb, S, H, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(Bb, S, H, N)), jnp.float32)
+    y_model, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=S)  # G=H
+    # kernel view: one cell per (b, head)
+    cum = jnp.cumsum(dt * A[None, None, :], axis=1)      # (Bb,S,H)
+    cum_g = jnp.moveaxis(cum, -1, 1).reshape(Bb * H, S)
+    C_g = jnp.moveaxis(Cm, 2, 1).reshape(Bb * H, S, N)
+    B_g = jnp.moveaxis(Bm, 2, 1).reshape(Bb * H, S, N)
+    xdt = x * dt[..., None]
+    x_g = jnp.moveaxis(xdt, 2, 1).reshape(Bb * H, S, P)
+    y_k = ops.ssd_intra_chunk(cum_g, C_g, B_g, x_g)
+    y_k = jnp.moveaxis(y_k.reshape(Bb, H, S, P), 1, 2)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_model),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,60 @@
+"""Participation traces and the equivalent-view alpha masks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.participation import (TRACES, BernoulliParticipation, Trace,
+                                      assign_traces, sample_alpha)
+
+
+def test_cpu_traces_never_inactive():
+    rng = np.random.default_rng(0)
+    for t in TRACES[:5]:
+        s = t.sample_s(rng, 5, size=(500,))
+        assert (s >= 1).all(), t.name
+
+
+def test_bw_traces_include_inactive():
+    rng = np.random.default_rng(0)
+    for t in TRACES[5:]:
+        s = t.sample_s(rng, 5, size=(2000,))
+        frac_zero = (s == 0).mean()
+        assert abs(frac_zero - t.p_inactive) < 0.05, (t.name, frac_zero)
+
+
+def test_alpha_is_prefix_mask():
+    rng = np.random.default_rng(1)
+    traces = [TRACES[i % 8] for i in range(20)]
+    alpha = sample_alpha(rng, traces, E=5)
+    assert alpha.shape == (20, 5)
+    # prefix structure: once 0, stays 0
+    diffs = np.diff(alpha, axis=1)
+    assert (diffs <= 0).all()
+
+
+def test_trace_moments_roughly_match():
+    rng = np.random.default_rng(2)
+    t = TRACES[2]  # cpu_50: mean .75 stdev .113
+    f = t.sample_fraction(rng, size=(20000,))
+    assert abs(f.mean() - t.mean) < 0.02
+    assert abs(f.std() - t.stdev) < 0.03
+
+
+@settings(max_examples=10, deadline=None)
+@given(q=st.floats(0.1, 0.9), seed=st.integers(0, 100))
+def test_bernoulli_equivalent_view(q, seed):
+    """App. A.1.1: alpha_t ~ Bern(q) => s ~ Bin(E, q)."""
+    rng = np.random.default_rng(seed)
+    E = 8
+    bp = BernoulliParticipation(q)
+    alpha = bp.sample_alpha(rng, 3000, E)
+    s = alpha.sum(axis=1)
+    assert abs(s.mean() - E * q) < 0.3
+    assert abs(s.var() - E * q * (1 - q)) < 0.5
+
+
+def test_assign_traces_uses_first_j():
+    rng = np.random.default_rng(0)
+    traces = assign_traces(rng, 50, 3)
+    names = {t.name for t in traces}
+    assert names <= {t.name for t in TRACES[:3]}

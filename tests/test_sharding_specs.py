@@ -1,0 +1,81 @@
+"""Sharding-spec validity: every parameter/cache leaf of every assigned
+arch must be divisible along its sharded dims on the production meshes
+(GSPMD rejects non-divisible *argument* shardings) — this is the cheap
+static proxy for the full dry-run."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+
+MESH_AXES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _check_divisible(specs, shapes, where):
+    import jax
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_shapes = jax.tree.leaves(shapes)
+    assert len(flat_specs) == len(flat_shapes)
+    for spec, leaf in zip(flat_specs, flat_shapes):
+        for dim, entry in zip(leaf.shape, spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = int(np.prod([MESH_AXES[a] for a in axes]))
+            assert dim % n == 0, (where, leaf.shape, spec, dim, n)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_param_specs_divisible(arch, fsdp):
+    import jax
+    from repro.launch.steps import abstract_params
+    from repro.models.sharding import tree_param_specs
+    cfg = get_config(arch)
+    aparams = abstract_params(cfg)
+    specs = tree_param_specs(aparams, fsdp=fsdp)
+    _check_divisible(specs, aparams, f"{arch} fsdp={fsdp}")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, shape_name):
+    import jax
+    from repro.models import transformer
+    cfg = get_config(arch)
+    if not cfg.supports_shape(shape_name):
+        pytest.skip("long_500k unsupported for full-attention arch")
+    shape = INPUT_SHAPES[shape_name]
+    cache = jax.eval_shape(lambda: transformer.init_cache(
+        cfg, shape.global_batch, shape.seq_len))
+
+    # reproduce steps.py cache specs (without a real mesh)
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        baxes = None  # B=1 (long_500k) worst case -> replicated; skip batch
+        if name in ("k", "v"):
+            return P(None, baxes, None, "model")
+        if name in ("ckv", "krope"):
+            return P(None, baxes, "model", None)
+        if name == "pos_map":
+            return P(None, None)
+        if name == "conv":
+            return P(None, baxes, None, "model")
+        if name == "state":
+            return P(None, baxes, None, None, "model", None)
+        return P(*([None] * len(leaf.shape)))
+
+    import jax.tree_util as jtu
+    specs = jtu.tree_map_with_path(spec_for, cache)
+    _check_divisible(specs, cache, f"{arch} {shape_name}")
+
+
+def test_param_bytes_within_hbm():
+    """Per-device param bytes must fit v5e HBM (16 GB) for serving."""
+    from repro.launch.steps import param_bytes, serve_fsdp
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        pb = param_bytes(cfg)
+        shard = 256 if serve_fsdp(cfg) else 16
+        per_dev = pb / shard
+        assert per_dev < 16e9, (arch, per_dev)

@@ -1,0 +1,11 @@
+"""Measured Scheme-C convergence stays inside the Theorem 3.1 envelope."""
+from benchmarks.bound_check import run
+
+
+def test_trajectory_within_thm31_bound():
+    rows = run(rounds=80, seed=1)
+    assert rows, "no measurements"
+    for tau, err, bound in rows:
+        assert err <= bound, (tau, err, bound)
+    # and the run actually converges
+    assert rows[-1][1] < 0.1 * max(rows[0][1], 1e-6) or rows[-1][1] < 0.05
