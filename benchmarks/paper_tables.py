@@ -60,7 +60,10 @@ def _run(cfg, clients, scheme, rounds, eta0, seed=0):
         clients=clients, local_epochs=5, batch_size=cfg.batch_size,
         scheme=scheme, eta0=eta0, seed=seed)
     hist = tr.run(rounds, eval_every=5)
-    return float(np.mean([h.acc for h in hist[-3:]])), tr
+    # non-eval rounds record NaN (honest records): average the last
+    # three *evaluated* rounds
+    accs = [h.acc for h in hist if np.isfinite(h.acc)]
+    return float(np.mean(accs[-3:])), tr
 
 
 def table3_scheme_comparison(rounds=60, n_clients=24, dataset="synthetic"):

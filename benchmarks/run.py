@@ -16,6 +16,11 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full-size paper tables (slower)")
     ap.add_argument("--skip-tables", action="store_true")
+    ap.add_argument("--skip-engine", action="store_true",
+                    help="skip the rounds/sec engine benchmark")
+    ap.add_argument("--bench-json", default="BENCH_engine.json",
+                    help="where to write the machine-readable engine "
+                         "benchmark (default: BENCH_engine.json)")
     args = ap.parse_args()
 
     print("# kernels: name,us_per_call,config")
@@ -23,6 +28,21 @@ def main() -> None:
     for name, us, cfg in kern_all():
         print(f"{name},{us:.1f},{cfg}")
     sys.stdout.flush()
+
+    if not args.skip_engine:
+        from benchmarks.engine_bench import main as engine_main
+        span = 64 if args.full else 32
+        res = engine_main(args.bench_json, span=span)
+        print("\n# engine: mode,rounds_per_sec")
+        for mode, rps in res["rounds_per_sec"].items():
+            print(f"{mode},{rps}")
+        print(f"engine_speedup_vs_seed,{res['speedup_engine_vs_seed']}")
+        print(f"host_overhead_fraction_seed_loop,"
+              f"{res['host_overhead_fraction_seed_loop']}")
+        print(f"weighted_agg_single_launch_us,"
+              f"{res['weighted_agg_single_launch_us']}")
+        print(f"# wrote {args.bench_json}")
+        sys.stdout.flush()
 
     if not args.skip_tables:
         from benchmarks.paper_tables import (table3_scheme_comparison,

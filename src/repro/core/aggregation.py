@@ -46,8 +46,8 @@ def aggregate_deltas(params, deltas, coeffs):
     """w + sum_k c_k delta_k over a stacked client axis.
 
     deltas: pytree with leading client dim (C, ...); coeffs: (C,).
-    This is the jnp reference path; kernels/weighted_agg is the fused
-    Pallas path used by the benchmarked aggregator.
+    This is the jnp reference path; aggregate_deltas_flat is the fused
+    single-launch Pallas path used by the device-resident round engine.
     """
     def upd(p, d):
         c = coeffs.astype(jnp.float32).reshape((-1,) + (1,) * (d.ndim - 1))
@@ -57,11 +57,43 @@ def aggregate_deltas(params, deltas, coeffs):
     return jax.tree.map(upd, params, deltas)
 
 
+def flatten_client_deltas(deltas):
+    """Stacked-client pytree (leaves (C, ...)) -> one (C, D_total) f32
+    buffer, leaves concatenated in jax.tree.leaves order."""
+    leaves = jax.tree.leaves(deltas)
+    C = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(C, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def aggregate_deltas_flat(params, deltas, coeffs, *, block: int = 2048,
+                          interpret=None):
+    """Same contract as aggregate_deltas, but the whole model is flattened
+    into a single (C, D_total) buffer and reduced with ONE weighted_agg
+    Pallas launch (instead of one scaled-add tree per leaf)."""
+    from repro.kernels import ops  # kernels never import core: no cycle
+
+    flat = flatten_client_deltas(deltas)
+    # shrink the tile for models smaller than one default block (pad waste)
+    D = flat.shape[1]
+    block = min(block, max(128, -(-D // 128) * 128))
+    agg = ops.weighted_agg(coeffs.astype(jnp.float32), flat, block=block,
+                           interpret=interpret)
+    p_leaves, treedef = jax.tree.flatten(params)
+    outs, off = [], 0
+    for p in p_leaves:
+        seg = agg[off:off + p.size].reshape(p.shape)
+        outs.append((p.astype(jnp.float32) + seg).astype(p.dtype))
+        off += p.size
+    return jax.tree.unflatten(treedef, outs)
+
+
 def accumulate_delta(acc, delta, coeff):
-    """Streaming form for the client-sequential mode: acc += c * delta."""
+    """Streaming form for the client-sequential mode: acc += c * delta.
+    coeff may be a plain python float or a jax scalar."""
+    c = jnp.asarray(coeff, jnp.float32)
     return jax.tree.map(
-        lambda a, d: a + coeff.astype(jnp.float32) * d.astype(jnp.float32),
-        acc, delta)
+        lambda a, d: a + c * d.astype(jnp.float32), acc, delta)
 
 
 def apply_accumulator(params, acc):

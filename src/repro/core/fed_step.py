@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import (accumulate_delta, aggregate_deltas,
-                                    apply_accumulator, scheme_coefficients)
+                                    aggregate_deltas_flat, apply_accumulator,
+                                    scheme_coefficients)
 
 
 def local_sgd(loss_fn: Callable, params, client_batches, alpha_e, eta):
@@ -47,12 +48,25 @@ def local_sgd(loss_fn: Callable, params, client_batches, alpha_e, eta):
         w_end, params)
 
 
-def fed_round_parallel(loss_fn, params, batches, alpha, coeffs, eta):
+def fed_round_parallel(loss_fn, params, batches, alpha, coeffs, eta, *,
+                       agg: str = "tree", interpret=None,
+                       with_metrics: bool = True):
     """batches: pytree (C, E, ...); alpha: (C, E); coeffs: (C,).
-    Returns (new_params, metrics)."""
+    Returns (new_params, metrics).
+
+    agg selects the aggregation layout: "tree" is the per-leaf jnp
+    reference; "flat" flattens the delta pytree into one (C, D_total)
+    buffer and reduces it with a single weighted_agg Pallas launch.
+    with_metrics=False skips the delta-norm reduction (hot-loop mode)."""
     deltas = jax.vmap(lambda b, a: local_sgd(loss_fn, params, b, a, eta))(
         batches, alpha)
-    new_params = aggregate_deltas(params, deltas, coeffs)
+    if agg == "flat":
+        new_params = aggregate_deltas_flat(params, deltas, coeffs,
+                                           interpret=interpret)
+    else:
+        new_params = aggregate_deltas(params, deltas, coeffs)
+    if not with_metrics:
+        return new_params, {"delta_norm": jnp.float32(0)}
     dn = jnp.sqrt(sum(jnp.sum(jnp.square(x))
                       for x in jax.tree.leaves(deltas)))
     return new_params, {"delta_norm": dn}
@@ -75,11 +89,13 @@ def fed_round_sequential(loss_fn, params, batches, alpha, coeffs, eta):
     return new_params, {"delta_norm": dn}
 
 
-def make_fed_round(loss_fn, mode: str = "client_parallel"):
+def make_fed_round(loss_fn, mode: str = "client_parallel",
+                   agg: str = "tree", interpret=None):
     """Returns fed_round(params, batches, alpha, coeffs, eta)."""
-    fn = (fed_round_parallel if mode == "client_parallel"
-          else fed_round_sequential)
-    return functools.partial(fn, loss_fn)
+    if mode == "client_parallel":
+        return functools.partial(fed_round_parallel, loss_fn, agg=agg,
+                                 interpret=interpret)
+    return functools.partial(fed_round_sequential, loss_fn)
 
 
 def fed_train_step(loss_fn, cfg, params, batches, alpha, p_weights, eta,

@@ -1,3 +1,4 @@
-from repro.fed.driver import Client, FederatedTrainer
+from repro.fed.driver import Client, FederatedTrainer, RoundRecord
+from repro.fed.engine import RoundEngine
 
-__all__ = ["Client", "FederatedTrainer"]
+__all__ = ["Client", "FederatedTrainer", "RoundRecord", "RoundEngine"]

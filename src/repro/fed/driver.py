@@ -8,6 +8,19 @@ Implements the full paper protocol around the jitted round step:
   * departures with include/exclude applicability decision (§4.3),
   * membership is handled by masking (alpha=0, coeff=0), so the compiled
     round step never recompiles as devices come and go.
+
+Execution delegates to the device-resident RoundEngine (fed/engine.py):
+client data lives on device once and R rounds run per host dispatch via a
+chunked, donated lax.scan.  Three modes:
+
+  engine="plan"   (default) participation/batch indices are sampled with
+                  the host numpy RNG in the seed order (sample-for-sample
+                  identical to the legacy loop) but every round runs on
+                  device; spans break at events and eval rounds.
+  engine="device" fully fused on-device jax.random sampling — the fast
+                  path; statistically equivalent to "plan".
+  engine="host"   the seed per-round host loop (reference for parity
+                  tests and benchmarks).
 """
 from __future__ import annotations
 
@@ -24,6 +37,7 @@ from repro.core.arrivals import RebootState, staircase_lr
 from repro.core.departures import BoundTerms, should_exclude
 from repro.core.fed_step import make_fed_round
 from repro.core.participation import Trace
+from repro.fed.engine import RoundEngine
 
 
 @dataclass
@@ -47,8 +61,8 @@ class Client:
 @dataclass
 class RoundRecord:
     tau: int
-    loss: float
-    acc: float
+    loss: float     # NaN on rounds where no eval ran (honest records)
+    acc: float      # NaN on rounds where no eval ran
     eta: float
     n_active: int
     s: np.ndarray
@@ -62,7 +76,8 @@ class FederatedTrainer:
                  reboot_boost: float = 3.0, fast_reboot: bool = True,
                  horizon: Optional[int] = None,
                  bound_terms: Optional[BoundTerms] = None,
-                 seed: int = 0):
+                 seed: int = 0, engine: Optional[str] = "plan",
+                 chunk_size: int = 16, agg: str = "auto"):
         self.loss_fn = loss_fn
         self.eval_fn = eval_fn  # eval_fn(params, x, y) -> (loss, acc)
         self.params = init_params
@@ -80,12 +95,34 @@ class FederatedTrainer:
             D=5.0, V=20.0, gamma=10.0, E=local_epochs)
         self.rng = np.random.default_rng(seed)
         self.round_fn = jax.jit(make_fed_round(loss_fn, "client_parallel"))
+        self.engine_mode = engine if engine not in (None, "off") else "host"
+        if self.engine_mode not in ("host", "plan", "device"):
+            raise ValueError(f"engine must be one of host|plan|device|off, "
+                             f"got {engine!r}")
+        self.chunk_size = chunk_size
+        self.agg = agg
+        self._engine: Optional[RoundEngine] = None
+        self._key = jax.random.PRNGKey(seed)
         # membership bookkeeping
         self.objective: set = {i for i, c in enumerate(clients)
                                if c.active_from == 0}
         self.reboots: List[RebootState] = []
         self.lr_shift_tau = 0
+        # per-client reboot state in array form for the engine: a client
+        # that never rebooted has boost 1 (multiplier exactly 1)
+        self._rb_tau0 = np.zeros(len(clients), np.int32)
+        self._rb_boost = np.ones(len(clients), np.float32)
         self.history: List[RoundRecord] = []
+        self._next_tau = 0
+
+    @property
+    def engine(self) -> RoundEngine:
+        if self._engine is None:
+            self._engine = RoundEngine(
+                loss_fn=self.loss_fn, clients=self.clients,
+                local_epochs=self.E, batch_size=self.B, scheme=self.scheme,
+                eta0=self.eta0, chunk_size=self.chunk_size, agg=self.agg)
+        return self._engine
 
     # -- weights over the current objective set -----------------------------
     def data_weights(self) -> np.ndarray:
@@ -95,23 +132,37 @@ class FederatedTrainer:
             p[i] = self.clients[i].n / total
         return p
 
-    def _sample_round(self, tau: int):
+    def _participating(self, i: int, tau: int) -> bool:
+        cl = self.clients[i]
+        return (i in self.objective and tau >= cl.active_from
+                and (cl.departs_at is None or tau < cl.departs_at))
+
+    def _sample_plan(self, tau: int):
+        """One round of host-RNG sampling: alpha (C, E) and batch indices
+        idx (C, E, B).  Draw order matches the seed loop exactly, so a
+        given numpy seed yields the identical sample stream."""
         C = len(self.clients)
         alpha = np.zeros((C, self.E), np.float32)
+        idx = np.zeros((C, self.E, self.B), np.int64)
+        for i, cl in enumerate(self.clients):
+            if not self._participating(i, tau):
+                continue
+            alpha[i] = (np.arange(self.E)
+                        < cl.trace.sample_s(self.rng, self.E)
+                        ).astype(np.float32)
+            idx[i] = self.rng.integers(0, cl.n, size=(self.E, self.B))
+        return alpha, idx
+
+    def _sample_round(self, tau: int):
+        alpha, idx = self._sample_plan(tau)
+        C = len(self.clients)
         xdim = self.clients[0].x.shape[1:]
         bx = np.zeros((C, self.E, self.B, *xdim), np.float32)
         by = np.zeros((C, self.E, self.B), np.int32)
         for i, cl in enumerate(self.clients):
-            participating = (i in self.objective
-                             and tau >= cl.active_from
-                             and (cl.departs_at is None or tau < cl.departs_at))
-            if not participating:
-                continue
-            alpha[i] = (np.arange(self.E)
-                        < cl.trace.sample_s(self.rng, self.E)).astype(np.float32)
-            idx = self.rng.integers(0, cl.n, size=(self.E, self.B))
-            bx[i] = cl.x[idx]
-            by[i] = cl.y[idx]
+            if self._participating(i, tau):
+                bx[i] = cl.x[idx[i]]
+                by[i] = cl.y[idx[i]]
         return alpha, {"x": bx, "y": by}
 
     # -- events --------------------------------------------------------------
@@ -125,6 +176,8 @@ class FederatedTrainer:
                 if self.fast_reboot:
                     self.reboots.append(RebootState(tau, i,
                                                     self.reboot_boost))
+                    self._rb_tau0[i] = tau
+                    self._rb_boost[i] = self.reboot_boost
                 ev += f"arrival:{i};"
             if cl.departs_at == tau and i in self.objective:
                 policy = cl.departure_policy
@@ -142,9 +195,25 @@ class FederatedTrainer:
                     ev += f"departure-include:{i};"
         return ev
 
+    def _event_taus(self):
+        taus = set()
+        for cl in self.clients:
+            if cl.active_from > 0:
+                taus.add(cl.active_from)
+            if cl.departs_at is not None:
+                taus.add(cl.departs_at)
+        return taus
+
     # -- main loop ------------------------------------------------------------
     def run(self, n_rounds: int, eval_every: int = 1):
-        for tau in range(n_rounds):
+        if self.engine_mode == "host":
+            return self._run_host(n_rounds, eval_every)
+        return self._run_engine(n_rounds, eval_every)
+
+    def _run_host(self, n_rounds: int, eval_every: int = 1):
+        """The seed per-round host loop (reference path)."""
+        start = self._next_tau
+        for tau in range(start, start + n_rounds):
             ev = self._handle_events(tau)
             p = self.data_weights()
             alpha, batches = self._sample_round(tau)
@@ -160,10 +229,73 @@ class FederatedTrainer:
                  "y": jnp.asarray(batches["y"])},
                 jnp.asarray(alpha), jnp.asarray(coeffs),
                 jnp.float32(eta))
+            loss = acc = float("nan")
             if tau % eval_every == 0 or ev:
                 loss, acc = self.evaluate()
             self.history.append(RoundRecord(tau, float(loss), float(acc),
                                             eta, int((s > 0).sum()), s, ev))
+        self._next_tau = start + n_rounds
+        return self.history
+
+    def _span_end(self, tau: int, stop: int, ev: str,
+                  eval_every: int) -> int:
+        """Largest t <= stop such that [tau, t) has fixed membership and at
+        most one eval, which lands on the final round of the span."""
+        end = stop
+        for t in self._event_taus():
+            if tau < t < end:
+                end = t
+        if ev:
+            return tau + 1  # event round: evaluate right after it
+        next_eval = tau + ((-tau) % eval_every)
+        if next_eval < end:
+            end = next_eval + 1
+        return end
+
+    def _run_engine(self, n_rounds: int, eval_every: int = 1):
+        eng = self.engine
+        start = self._next_tau
+        stop = start + n_rounds
+        tau = start
+        span_args = None
+        while tau < stop:
+            ev = self._handle_events(tau)
+            end = self._span_end(tau, stop, ev, eval_every)
+            R = end - tau
+            if span_args is None or ev:
+                # membership/reboot/LR state only changes at events, so the
+                # device-staged span arguments are reused across spans
+                p = self.data_weights()
+                active = np.array(
+                    [1.0 if self._participating(i, tau) else 0.0
+                     for i in range(len(self.clients))], np.float32)
+                span_args = dict(p=jnp.asarray(p, jnp.float32),
+                                 active=jnp.asarray(active),
+                                 lr_shift_tau=self.lr_shift_tau,
+                                 reboot_tau0=jnp.asarray(self._rb_tau0),
+                                 reboot_boost=jnp.asarray(self._rb_boost))
+            kwargs = span_args
+            if self.engine_mode == "device":
+                self._key, sub = jax.random.split(self._key)
+                self.params, m = eng.run_span(self.params, tau, R,
+                                              key=sub, **kwargs)
+            else:
+                plans = [self._sample_plan(t) for t in range(tau, end)]
+                alphas = np.stack([pl[0] for pl in plans])
+                idxs = np.stack([pl[1] for pl in plans])
+                self.params, m = eng.run_span(self.params, tau, R,
+                                              plan=(alphas, idxs), **kwargs)
+            eval_last = (end - 1) % eval_every == 0 or (ev and R == 1)
+            for j, t in enumerate(range(tau, end)):
+                loss = acc = float("nan")
+                if eval_last and t == end - 1:
+                    loss, acc = self.evaluate()
+                s = m["s"][j]
+                self.history.append(RoundRecord(
+                    t, float(loss), float(acc), float(m["eta"][j]),
+                    int((s > 0).sum()), s, ev if t == tau else ""))
+            tau = end
+        self._next_tau = stop
         return self.history
 
     def evaluate(self, include_idx: Optional[set] = None):

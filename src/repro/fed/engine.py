@@ -1,0 +1,258 @@
+"""Device-resident multi-round federated engine.
+
+The seed host loop (FederatedTrainer.run) rebuilt a (C, E, B, ...) numpy
+batch tensor, shipped it host->device, and computed scheme coefficients in
+numpy — every round.  This engine moves the whole round inside one jitted,
+chunked ``lax.scan``:
+
+  * client datasets are padded to a common length and live on device once
+    as (C, Nmax, ...) stacks; per-round batch selection is an on-device
+    gather (vmapped ``jnp.take``);
+  * participation masks alpha can be sampled on device (inverse-CDF draw
+    from an exact per-client table of the paper's Table-2 trace law, see
+    trace_s_cdf) or supplied as a host-precomputed *plan* — the plan path
+    consumes the trainer's numpy RNG in the seed order, so it is
+    sample-for-sample identical to the legacy loop and is what the parity
+    tests compare against;
+  * scheme A/B/C coefficients, fast-reboot boosts (per-client (tau0,
+    boost) arrays evaluated at each in-chunk tau, so the O(dt^-2) decay is
+    exact mid-chunk) and the staircase LR are computed inside the step;
+  * R rounds run per host dispatch via ``lax.scan`` over power-of-two
+    chunk sizes (bounded compile cache), with ``params`` donated to the
+    chunk call on backends that support buffer donation;
+  * aggregation uses the pytree-flat path: the delta pytree is flattened
+    to one (C, D_total) buffer and reduced with a single weighted_agg
+    Pallas launch per round (``agg="flat"``), or the per-leaf jnp tree
+    path (``agg="tree"``).
+
+The host loop above the engine (FederatedTrainer) only handles
+arrival/departure events and evaluation at chunk boundaries.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import scheme_coefficients
+from repro.core.fed_step import fed_round_parallel
+
+
+def _pow2_chunks(n: int, cap: int):
+    """Split n rounds into power-of-two chunk lengths <= cap (largest
+    first), so at most log2(cap)+1 distinct scan lengths ever compile."""
+    out = []
+    while n > 0:
+        r = min(1 << (n.bit_length() - 1), 1 << (cap.bit_length() - 1))
+        out.append(r)
+        n -= r
+    return out
+
+
+def trace_s_cdf(clients, E: int) -> np.ndarray:
+    """Per-client CDF table of completed epochs s: (C, E+1) with
+    cdf[c, k] = P(s_c <= k).
+
+    s = round(frac * E) for frac ~ Beta(a, b) mixed with an inactivity
+    atom at 0, so the s-law is a discrete distribution over {0..E} whose
+    CDF is exact regularized-incomplete-beta evaluations at the rounding
+    boundaries (k + 1/2)/E — computed once at engine build time, which
+    removes the gamma rejection sampler from the hot path entirely while
+    sampling the *identical* distribution as Trace.sample_s.
+    """
+    from jax.scipy.special import betainc
+
+    C = len(clients)
+    cdf = np.zeros((C, E + 1), np.float64)
+    ks = np.arange(E + 1)
+    for c_i, cl in enumerate(clients):
+        t = cl.trace
+        ab = t._beta_params()
+        if ab is None:
+            # degenerate trace: frac == mean deterministically
+            s0 = int(np.clip(np.round(t.mean * E), 0, E))
+            base = (ks >= s0).astype(np.float64)
+        else:
+            x = np.clip((ks + 0.5) / E, 0.0, 1.0)
+            base = np.asarray(betainc(ab[0], ab[1], x), np.float64)
+            base[-1] = 1.0
+        q = t.p_inactive
+        if q > 0:
+            # inactive rounds put an atom at s = 0
+            cdf[c_i] = q + (1.0 - q) * base
+        else:
+            # CPU-contention traces never produce zero epochs: the s=0
+            # mass moves to s=1 (Trace.sample_s's maximum(s, 1))
+            cdf[c_i] = base
+            cdf[c_i, 0] = 0.0
+        cdf[c_i, -1] = 1.0
+    return cdf.astype(np.float32)
+
+
+def device_sample_span(key, R: int, active, n, s_cdf, E: int, B: int):
+    """On-device sampling of participation + batch indices for a whole
+    R-round span in one vectorized draw.
+
+    active: (C,) 0/1 mask of clients participating this span; n: (C,)
+    dataset sizes; s_cdf: (C, E+1) per-client CDF of completed epochs
+    (trace_s_cdf).  Returns alphas (R, C, E) f32, idxs (R, C, E, B) i32.
+    """
+    ks, kb = jax.random.split(key)
+    C = n.shape[0]
+    # inverse-CDF draw of s: s = #{k : cdf[k] < u}
+    u = jax.random.uniform(ks, (R, C))
+    s = jnp.sum(u[:, :, None] > s_cdf[None, :, :], axis=-1)
+    s = s.astype(jnp.float32) * active[None, :]
+    alphas = (jnp.arange(E, dtype=jnp.float32)[None, None, :]
+              < s[:, :, None]).astype(jnp.float32)
+    ub = jax.random.uniform(kb, (R, C, E, B))
+    nf = n.astype(jnp.float32)[None, :, None, None]
+    idxs = jnp.minimum((ub * nf).astype(jnp.int32),
+                       n[None, :, None, None] - 1)
+    return alphas, idxs
+
+
+class RoundEngine:
+    """Runs R federated rounds per host dispatch on device-resident data.
+
+    Membership, data weights p, the LR-restart round and reboot state are
+    constant within a span (the trainer splits spans at every event), so
+    they enter the chunk as plain array arguments — values change between
+    chunks without recompiling.
+    """
+
+    def __init__(self, *, loss_fn, clients, local_epochs: int,
+                 batch_size: int, scheme: str = "C", eta0: float = 0.01,
+                 chunk_size: int = 16, agg: str = "auto",
+                 interpret=None, donate: Optional[bool] = None,
+                 with_metrics: bool = False):
+        self.loss_fn = loss_fn
+        self.E = local_epochs
+        self.B = batch_size
+        self.scheme = scheme
+        self.eta0 = eta0
+        self.chunk_size = max(1, chunk_size)
+        if agg == "auto":
+            # the fused Pallas launch is the TPU path; its interpret-mode
+            # emulation on CPU costs more than the per-leaf jnp tree
+            agg = "flat" if jax.default_backend() == "tpu" else "tree"
+        self.agg = agg
+        self.interpret = interpret
+        self.with_metrics = with_metrics
+        if donate is None:  # CPU jit cannot reuse donated buffers
+            donate = jax.default_backend() != "cpu"
+        self.donate = donate
+
+        C = len(clients)
+        ns = [c.n for c in clients]
+        nmax = max(ns)
+        x0 = np.asarray(clients[0].x)
+        X = np.zeros((C, nmax) + x0.shape[1:], np.float32)
+        Y = np.zeros((C, nmax), np.int32)
+        for i, c in enumerate(clients):
+            X[i, :c.n] = c.x
+            Y[i, :c.n] = c.y
+        # datasets move host->device exactly once, here
+        self.data_x = jax.device_put(X)
+        self.data_y = jax.device_put(Y)
+        self.n = jax.device_put(np.asarray(ns, np.int32))
+        self.s_cdf = jax.device_put(trace_s_cdf(clients, self.E))
+        self._fns = {}
+
+    # -- jitted chunk builders ------------------------------------------------
+    def _round_core(self, params, data_x, data_y, alpha, idx, tau, p,
+                    rb_tau0, rb_boost, lr_shift):
+        gather = jax.vmap(lambda d, i: jnp.take(d, i, axis=0))
+        batches = {"x": gather(data_x, idx), "y": gather(data_y, idx)}
+        s = jnp.sum(alpha, axis=-1)
+        coeffs = scheme_coefficients(self.scheme, p, s, self.E)
+        # fast-reboot boost, exact O((tau-tau0)^-2) decay at every in-chunk
+        # tau; rb_boost == 1 for never-rebooted clients => multiplier 1
+        dt = jnp.maximum(tau - rb_tau0, 0).astype(jnp.float32)
+        coeffs = coeffs * (1.0 + (rb_boost - 1.0) / jnp.square(1.0 + dt))
+        eta = jnp.float32(self.eta0) / jnp.maximum(
+            (tau + 1 - lr_shift).astype(jnp.float32), 1.0)
+        new_params, m = fed_round_parallel(
+            self.loss_fn, params, batches, alpha, coeffs, eta,
+            agg=self.agg, interpret=self.interpret,
+            with_metrics=self.with_metrics)
+        return new_params, {"s": s, "eta": eta,
+                            "delta_norm": m["delta_norm"]}
+
+    def _get_fn(self, R: int, sampled: bool):
+        cache_key = (R, sampled)
+        if cache_key in self._fns:
+            return self._fns[cache_key]
+
+        if sampled:
+            def chunk(params, data_x, data_y, n, s_cdf, key, active, taus,
+                      p, rb_tau0, rb_boost, lr_shift):
+                alphas, idxs = device_sample_span(
+                    key, R, active, n, s_cdf, self.E, self.B)
+
+                def body(w, xs):
+                    alpha, idx, tau = xs
+                    return self._round_core(w, data_x, data_y, alpha, idx,
+                                            tau, p, rb_tau0, rb_boost,
+                                            lr_shift)
+                return jax.lax.scan(body, params, (alphas, idxs, taus))
+        else:
+            def chunk(params, data_x, data_y, alphas, idxs, taus, p,
+                      rb_tau0, rb_boost, lr_shift):
+                def body(w, xs):
+                    alpha, idx, tau = xs
+                    return self._round_core(w, data_x, data_y, alpha, idx,
+                                            tau, p, rb_tau0, rb_boost,
+                                            lr_shift)
+                return jax.lax.scan(body, params, (alphas, idxs, taus))
+
+        fn = jax.jit(chunk, donate_argnums=(0,) if self.donate else ())
+        self._fns[cache_key] = fn
+        return fn
+
+    # -- host entry point -----------------------------------------------------
+    def run_span(self, params, tau_start: int, n_rounds: int, *, p, active,
+                 lr_shift_tau: int, reboot_tau0, reboot_boost,
+                 plan=None, key=None):
+        """Run n_rounds starting at tau_start with fixed membership.
+
+        plan: (alphas (R, C, E), idxs (R, C, E, B)) host-sampled arrays
+        (numpy-RNG parity mode), or key: a jax PRNG key for fully
+        on-device sampling.  Exactly one must be given.
+
+        Returns (params, metrics) with metrics stacked over rounds:
+        s (R, C), eta (R,), delta_norm (R,).
+        """
+        if (plan is None) == (key is None):
+            raise ValueError("pass exactly one of plan= or key=")
+        p = jnp.asarray(p, jnp.float32)
+        active = jnp.asarray(active, jnp.float32)
+        rb_tau0 = jnp.asarray(reboot_tau0, jnp.int32)
+        rb_boost = jnp.asarray(reboot_boost, jnp.float32)
+        lr_shift = jnp.int32(lr_shift_tau)
+        if plan is not None:
+            alphas = jnp.asarray(plan[0], jnp.float32)
+            idxs = jnp.asarray(plan[1], jnp.int32)
+
+        ms, off, tau = [], 0, tau_start
+        for r in _pow2_chunks(n_rounds, self.chunk_size):
+            taus = jnp.arange(tau, tau + r, dtype=jnp.int32)
+            if plan is not None:
+                fn = self._get_fn(r, sampled=False)
+                params, m = fn(params, self.data_x, self.data_y,
+                               alphas[off:off + r], idxs[off:off + r],
+                               taus, p, rb_tau0, rb_boost, lr_shift)
+            else:
+                fn = self._get_fn(r, sampled=True)
+                # fold per chunk so split chunks never reuse randomness
+                sub = jax.random.fold_in(key, tau)
+                params, m = fn(params, self.data_x, self.data_y, self.n,
+                               self.s_cdf, sub, active, taus, p,
+                               rb_tau0, rb_boost, lr_shift)
+            ms.append(jax.tree.map(np.asarray, m))
+            off += r
+            tau += r
+        metrics = {k: np.concatenate([m[k] for m in ms]) for k in ms[0]}
+        return params, metrics

@@ -1,8 +1,10 @@
 """jit'd public wrappers over the Pallas kernels.
 
-On this CPU container the kernels run with interpret=True (the kernel body
-executes in Python per block — bit-exact semantics, no TPU).  On a real TPU
-set REPRO_PALLAS_INTERPRET=0 (or pass interpret=False).
+Backend auto-detection: with no override, kernels compile to Mosaic on TPU
+and fall back to interpret mode everywhere else (the kernel body executes
+via the Pallas interpreter — bit-exact semantics, no TPU required).
+Set REPRO_PALLAS_INTERPRET=0/1 to force either mode globally, or pass
+interpret= per call.
 """
 from __future__ import annotations
 
@@ -14,19 +16,31 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.masked_sgd import masked_sgd as _masked_sgd
 from repro.kernels.ssd_chunk import ssd_intra_chunk as _ssd_intra
+from repro.kernels.weighted_agg import resolve_interpret
 from repro.kernels.weighted_agg import weighted_agg as _weighted_agg
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+_ENV = os.environ.get("REPRO_PALLAS_INTERPRET")
+# None = auto (backend-aware); otherwise forced by the environment.
+INTERPRET = None if _ENV is None else _ENV != "0"
 
 
-def weighted_agg(coeffs, deltas, *, block=2048, interpret=None):
+def _interp(interpret):
+    """Per-call override > env override > backend auto-detection."""
+    if interpret is not None:
+        return bool(interpret)
+    return resolve_interpret(INTERPRET)
+
+
+def weighted_agg(coeffs, deltas, *, block=2048, interpret=None,
+                 k_block=None):
     return _weighted_agg(coeffs, deltas, block=block,
-                         interpret=INTERPRET if interpret is None else interpret)
+                         interpret=_interp(interpret), k_block=k_block)
 
 
 def weighted_agg_tree(params, deltas_tree, coeffs, *, interpret=None):
-    """Aggregate a stacked-client pytree via the fused kernel:
-    new_w = w + weighted_agg(coeffs, flatten(deltas))."""
+    """Aggregate a stacked-client pytree leaf-by-leaf via the fused kernel
+    (one launch per leaf).  The single-launch whole-model path is
+    core.aggregation.aggregate_deltas_flat."""
     leaves, treedef = jax.tree.flatten(deltas_tree)
     p_leaves = jax.tree.leaves(params)
     outs = []
@@ -41,15 +55,13 @@ def weighted_agg_tree(params, deltas_tree, coeffs, *, interpret=None):
 
 def masked_sgd(w, g, eta_alpha, *, block=4096, interpret=None):
     return _masked_sgd(w, g, jnp.asarray(eta_alpha),
-                       block=block,
-                       interpret=INTERPRET if interpret is None else interpret)
+                       block=block, interpret=_interp(interpret))
 
 
 def ssd_intra_chunk(cum, C, B, xdt, *, interpret=None):
     """Mamba2 SSD intra-chunk dual.  cum: (G,Q); C,B: (G,Q,N);
     xdt: (G,Q,P) -> (G,Q,P) f32."""
-    return _ssd_intra(cum, C, B, xdt,
-                      interpret=INTERPRET if interpret is None else interpret)
+    return _ssd_intra(cum, C, B, xdt, interpret=_interp(interpret))
 
 
 def flash_attention(q, k, v, *, causal=True, blk_q=128, blk_k=128,
@@ -61,4 +73,4 @@ def flash_attention(q, k, v, *, causal=True, blk_q=128, blk_k=128,
         k = jnp.repeat(k, rep, axis=1)
         v = jnp.repeat(v, rep, axis=1)
     return _flash(q, k, v, causal=causal, blk_q=blk_q, blk_k=blk_k,
-                  interpret=INTERPRET if interpret is None else interpret)
+                  interpret=_interp(interpret))

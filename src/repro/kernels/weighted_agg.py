@@ -7,6 +7,17 @@ loads a (K, BLK) tile of client deltas plus the (K,) coefficient vector and
 reduces on-chip (one (1,K)x(K,BLK) MXU matmul per tile).  K (clients per
 round) is small, so the tile streams at HBM bandwidth — this kernel turns
 the aggregation from K separate scaled-add passes into one fused pass.
+
+Two grid layouts:
+
+  * single-block K (K <= MAX_SINGLE_K): grid (D/BLK,), the whole client
+    axis is resident per tile — one matmul per output block.
+  * tiled K (large federations): grid (D/BLK, K/KBLK); the client axis is
+    streamed in KBLK slabs and accumulated into the revisited output block
+    (init on k==0, += after), so VMEM stays bounded as K grows.
+
+`interpret=None` auto-detects the backend: compiled Mosaic on TPU,
+interpreter everywhere else (CPU CI containers).
 """
 from __future__ import annotations
 
@@ -17,6 +28,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK = 2048
+# Largest client axis kept fully resident per tile before switching to the
+# streamed multi-block K layout.
+MAX_SINGLE_K = 64
+DEFAULT_K_BLOCK = 32
+
+
+def resolve_interpret(interpret):
+    """None -> interpret only off-TPU (compiled Mosaic on real hardware)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 def _agg_kernel(c_ref, d_ref, o_ref):
@@ -26,24 +48,72 @@ def _agg_kernel(c_ref, d_ref, o_ref):
                          preferred_element_type=jnp.float32)  # (1, BLK)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _agg_kernel_ktiled(c_ref, d_ref, o_ref):
+    k = pl.program_id(1)
+    part = jnp.dot(c_ref[...].astype(jnp.float32),     # (1, KBLK)
+                   d_ref[...].astype(jnp.float32),     # (KBLK, BLK)
+                   preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k > 0)
+    def _accumulate():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "interpret", "k_block"))
 def weighted_agg(coeffs, deltas, *, block: int = DEFAULT_BLOCK,
-                 interpret: bool = True):
-    """coeffs: (K,) f32; deltas: (K, D) any float dtype -> (D,) f32."""
+                 interpret: bool | None = None,
+                 k_block: int | None = None):
+    """coeffs: (K,) f32; deltas: (K, D) any float dtype -> (D,) f32.
+
+    k_block=None picks the layout automatically (single-block K up to
+    MAX_SINGLE_K, then DEFAULT_K_BLOCK slabs); pass an explicit k_block to
+    force the streamed path.
+    """
+    interpret = resolve_interpret(interpret)
     K, D = deltas.shape
     pad = (-D) % block
     if pad:
         deltas = jnp.pad(deltas, ((0, 0), (0, pad)))
     Dp = D + pad
+    coeffs = coeffs.astype(jnp.float32)
+
+    if k_block is None and K > MAX_SINGLE_K:
+        k_block = DEFAULT_K_BLOCK
+
+    if k_block is None or k_block >= K:
+        out = pl.pallas_call(
+            _agg_kernel,
+            grid=(Dp // block,),
+            in_specs=[
+                pl.BlockSpec((1, K), lambda i: (0, 0)),
+                pl.BlockSpec((K, block), lambda i: (0, i)),
+            ],
+            out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((1, Dp), jnp.float32),
+            interpret=interpret,
+        )(coeffs.reshape(1, K), deltas)
+        return out[0, :D]
+
+    # streamed K: zero-pad the client axis (zero coeff rows contribute 0)
+    kpad = (-K) % k_block
+    if kpad:
+        coeffs = jnp.pad(coeffs, (0, kpad))
+        deltas = jnp.pad(deltas, ((0, kpad), (0, 0)))
+    Kp = K + kpad
     out = pl.pallas_call(
-        _agg_kernel,
-        grid=(Dp // block,),
+        _agg_kernel_ktiled,
+        grid=(Dp // block, Kp // k_block),
         in_specs=[
-            pl.BlockSpec((1, K), lambda i: (0, 0)),
-            pl.BlockSpec((K, block), lambda i: (0, i)),
+            pl.BlockSpec((1, k_block), lambda i, k: (0, k)),
+            pl.BlockSpec((k_block, block), lambda i, k: (k, i)),
         ],
-        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_specs=pl.BlockSpec((1, block), lambda i, k: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, Dp), jnp.float32),
         interpret=interpret,
-    )(coeffs.reshape(1, K), deltas)
+    )(coeffs.reshape(1, Kp), deltas)
     return out[0, :D]

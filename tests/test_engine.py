@@ -1,0 +1,207 @@
+"""Device-resident round engine: parity vs the seed per-round host loop.
+
+The plan-mode engine consumes the trainer's numpy RNG in the seed draw
+order, so alpha masks and batch indices are sample-for-sample identical to
+the legacy loop; with the matching ("tree") aggregation layout the
+trajectories agree to f32 tolerance over many rounds including
+arrival/departure events and a mid-chunk decaying reboot boost.
+
+The pytree-flat Pallas aggregation is parity-tested at the aggregation
+level (tight allclose vs aggregate_deltas across f32/bf16 leaves) and over
+a short multi-round run.  Long chained runs under post-event dynamics
+(reboot boost + LR restart) amplify the f32 sum-order difference between
+the two layouts chaotically (observed 1e-7 -> 1e-2 within ~9 rounds), so
+layout-crossed trajectory comparisons are intentionally short.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper import SYNTHETIC_LR
+from repro.core.aggregation import (aggregate_deltas, aggregate_deltas_flat,
+                                    accumulate_delta)
+from repro.core.participation import TRACES
+from repro.data import synthetic_federation
+from repro.fed import Client, FederatedTrainer, RoundEngine
+from repro.fed.engine import _pow2_chunks, trace_s_cdf
+from repro.models.small import init_small, logits_small, make_loss_fn
+
+CFG = SYNTHETIC_LR
+
+
+def eval_fn(params, x, y):
+    lg = logits_small(params, CFG, x)
+    ll = jax.nn.log_softmax(lg)
+    loss = -jnp.mean(jnp.take_along_axis(
+        ll, y[:, None].astype(jnp.int32), axis=1))
+    acc = jnp.mean((jnp.argmax(lg, -1) == y).astype(jnp.float32))
+    return float(loss), float(acc)
+
+
+def make_clients(n=8, seed=0, with_events=False):
+    train, test = synthetic_federation(0.5, 0.5, n, seed=seed)
+    rng = np.random.default_rng(seed)
+    clients = [Client(x=tr[0], y=tr[1], trace=TRACES[rng.integers(0, 8)],
+                      x_test=te[0], y_test=te[1])
+               for tr, te in zip(train, test)]
+    if with_events:
+        clients[-1].active_from = 3   # arrival => reboot boost from tau=3
+        clients[2].departs_at = 6
+    return clients
+
+
+def make_trainer(clients, *, scheme="C", engine="plan", agg="auto", **kw):
+    return FederatedTrainer(
+        loss_fn=make_loss_fn(CFG), eval_fn=eval_fn,
+        init_params=init_small(jax.random.PRNGKey(0), CFG),
+        clients=clients, local_epochs=5, batch_size=10, scheme=scheme,
+        eta0=1.0, seed=0, engine=engine, agg=agg, **kw)
+
+
+def assert_params_close(p1, p2, rtol=3e-4, atol=1e-5):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("scheme", ["A", "B", "C"])
+def test_engine_matches_host_loop_with_midchunk_reboot(scheme):
+    """Fused multi-round scan == per-round host loop for schemes A/B/C,
+    including an arrival at tau=3 whose reboot boost decays *inside* the
+    subsequent chunk (eval_every=12 keeps rounds 3..11 in one span)."""
+    th = make_trainer(make_clients(with_events=True), scheme=scheme,
+                      engine="host")
+    te = make_trainer(make_clients(with_events=True), scheme=scheme,
+                      engine="plan", agg="tree", chunk_size=16)
+    h1 = th.run(12, eval_every=12)
+    h2 = te.run(12, eval_every=12)
+    assert_params_close(th.params, te.params)
+    assert th.objective == te.objective
+    assert len(te.reboots) == len(th.reboots) == 1
+    for r1, r2 in zip(h1, h2):
+        np.testing.assert_array_equal(r1.s, r2.s)  # identical RNG stream
+        np.testing.assert_allclose(r1.eta, r2.eta, rtol=1e-6)
+        assert r1.event == r2.event
+        assert np.isnan(r1.loss) == np.isnan(r2.loss)
+
+
+def test_engine_flat_agg_short_trajectory_parity():
+    """The flat Pallas layout tracks the host loop over a short run (before
+    f32 sum-order differences can amplify through the training map)."""
+    th = make_trainer(make_clients(), engine="host")
+    tf = make_trainer(make_clients(), engine="plan", agg="flat")
+    th.run(5, eval_every=5)
+    tf.run(5, eval_every=5)
+    assert_params_close(th.params, tf.params, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtypes", [(jnp.float32, jnp.float32),
+                                    (jnp.float32, jnp.bfloat16)])
+def test_flat_aggregation_matches_tree(dtypes):
+    """aggregate_deltas_flat (one weighted_agg launch over the flattened
+    model) == aggregate_deltas (per-leaf scaled-add) on mixed-dtype trees."""
+    dt_a, dt_b = dtypes
+    key = jax.random.PRNGKey(0)
+    C = 6
+    params = {"w": jax.random.normal(key, (37, 11), dt_a),
+              "b": jax.random.normal(key, (11,), dt_b),
+              "nested": {"v": jax.random.normal(key, (5, 3, 2), dt_a)}}
+    deltas = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.fold_in(key, p.size),
+                                    (C,) + p.shape, p.dtype), params)
+    coeffs = jax.random.uniform(jax.random.PRNGKey(1), (C,))
+    want = aggregate_deltas(params, deltas, coeffs)
+    got = aggregate_deltas_flat(params, deltas, coeffs)
+    for w, g in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        assert w.dtype == g.dtype
+        np.testing.assert_allclose(np.asarray(w, np.float32),
+                                   np.asarray(g, np.float32),
+                                   rtol=2e-2 if dt_b == jnp.bfloat16
+                                   else 1e-5, atol=1e-3)
+
+
+def test_engine_device_sampling_distribution():
+    """On-device inverse-CDF sampling reproduces Trace.sample_s's law:
+    per-client mean of s within a few stderr of the host sampler."""
+    clients = make_clients(6, seed=1)
+    eng = RoundEngine(loss_fn=make_loss_fn(CFG), clients=clients,
+                      local_epochs=5, batch_size=4)
+    from repro.fed.engine import device_sample_span
+    alphas, idxs = device_sample_span(
+        jax.random.PRNGKey(0), 600, jnp.ones(len(clients)), eng.n,
+        eng.s_cdf, 5, 4)
+    s_dev = np.asarray(alphas.sum(-1))        # (600, C)
+    rng = np.random.default_rng(0)
+    s_host = np.stack([[c.trace.sample_s(rng, 5) for c in clients]
+                       for _ in range(600)])
+    np.testing.assert_allclose(s_dev.mean(0), s_host.mean(0), atol=0.35)
+    # batch indices in range
+    n = np.asarray(eng.n)
+    assert (np.asarray(idxs) < n[None, :, None, None]).all()
+    assert (np.asarray(idxs) >= 0).all()
+
+
+def test_engine_device_mode_trains():
+    tr = make_trainer(make_clients(12, seed=2), engine="device",
+                      chunk_size=8)
+    hist = tr.run(30, eval_every=30)
+    assert len(hist) == 30
+    loss0 = hist[0].loss                  # evaluated at tau=0
+    loss_end, _ = tr.evaluate()
+    assert np.isfinite(loss0) and loss_end < 0.8 * loss0
+    # all rounds carried realized participation counts
+    assert all(h.n_active >= 1 for h in hist)
+
+
+def test_engine_events_at_chunk_boundaries():
+    """Arrivals/departures land on exact rounds even with large chunks."""
+    tr = make_trainer(make_clients(with_events=True), engine="plan",
+                      chunk_size=16)
+    hist = tr.run(10, eval_every=10)
+    assert any("arrival:7" in h.event for h in hist if h.tau == 3)
+    assert any("departure" in h.event for h in hist if h.tau == 6)
+    assert tr.lr_shift_tau == 6
+    assert 7 in tr.objective and 2 not in tr.objective
+
+
+def test_round_records_honest_nan_when_not_evaluated():
+    """Satellite fix: rounds without an eval record NaN, never a stale
+    copy of the previous eval."""
+    for engine in ("host", "plan"):
+        tr = make_trainer(make_clients(), engine=engine)
+        hist = tr.run(6, eval_every=2)
+        for h in hist:
+            if h.tau % 2 == 0:
+                assert np.isfinite(h.loss) and np.isfinite(h.acc)
+            else:
+                assert np.isnan(h.loss) and np.isnan(h.acc)
+
+
+def test_accumulate_delta_accepts_plain_float():
+    acc = {"w": jnp.zeros((3,), jnp.float32)}
+    delta = {"w": jnp.ones((3,), jnp.bfloat16)}
+    out = accumulate_delta(acc, delta, 0.5)
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.5)
+    out2 = accumulate_delta(acc, delta, jnp.float32(2.0))
+    np.testing.assert_allclose(np.asarray(out2["w"]), 2.0)
+
+
+def test_pow2_chunking():
+    assert _pow2_chunks(13, 8) == [8, 4, 1]
+    assert _pow2_chunks(32, 32) == [32]
+    assert _pow2_chunks(1, 16) == [1]
+    assert _pow2_chunks(0, 16) == []
+
+
+def test_trace_s_cdf_properties():
+    clients = make_clients(8, seed=3)
+    cdf = trace_s_cdf(clients, 5)
+    assert cdf.shape == (8, 6)
+    assert np.all(np.diff(cdf, axis=1) >= -1e-6)      # monotone
+    np.testing.assert_allclose(cdf[:, -1], 1.0)
+    for i, c in enumerate(clients):
+        if c.trace.p_inactive == 0:
+            assert cdf[i, 0] == 0.0                   # s >= 1 clamp
+        else:
+            assert cdf[i, 0] >= c.trace.p_inactive - 1e-6

@@ -23,6 +23,47 @@ def test_weighted_agg_matches_ref(K, D, dtype):
                                else 1e-6, atol=1e-5)
 
 
+@pytest.mark.parametrize("K,k_block", [(8, 4), (32, 8), (48, 32), (7, 2)])
+@pytest.mark.parametrize("D", [256, 5000])
+def test_weighted_agg_tiled_k_matches_ref(K, k_block, D):
+    """Streamed multi-block K path (client axis in k_block slabs,
+    accumulated across the second grid dim) == single-block reference."""
+    k1, k2 = jax.random.split(KEY)
+    c = jax.random.uniform(k1, (K,), jnp.float32)
+    d = jax.random.normal(k2, (K, D), jnp.float32)
+    got = ops.weighted_agg(c, d, k_block=k_block)
+    want = ref.weighted_agg_ref(c, d)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_weighted_agg_auto_tiles_large_k():
+    """K beyond MAX_SINGLE_K silently switches to the streamed layout."""
+    from repro.kernels.weighted_agg import MAX_SINGLE_K
+    K = MAX_SINGLE_K + 9
+    k1, k2 = jax.random.split(KEY)
+    c = jax.random.uniform(k1, (K,), jnp.float32)
+    d = jax.random.normal(k2, (K, 3000), jnp.float32)
+    got = ops.weighted_agg(c, d)
+    want = ref.weighted_agg_ref(c, d)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_weighted_agg_backend_aware_interpret_default():
+    """interpret=None resolves from the backend: interpret mode everywhere
+    except TPU (so the CPU CI container runs without Mosaic)."""
+    from repro.kernels.weighted_agg import resolve_interpret
+    expected = jax.default_backend() != "tpu"
+    assert resolve_interpret(None) == expected
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    # and the public wrapper works with no interpret argument at all
+    c = jax.random.uniform(KEY, (4,), jnp.float32)
+    d = jax.random.normal(KEY, (4, 300), jnp.float32)
+    np.testing.assert_allclose(ops.weighted_agg(c, d),
+                               ref.weighted_agg_ref(c, d),
+                               rtol=1e-5, atol=1e-5)
+
+
 @settings(max_examples=20, deadline=None)
 @given(K=st.integers(1, 16), D=st.integers(1, 3000),
        block=st.sampled_from([128, 512, 2048]))
