@@ -11,6 +11,20 @@ import sys
 import time
 
 
+def scenario_smoke(name: str, *, rounds: int = 8, seed: int = 0) -> dict:
+    """Tiny end-to-end streaming scenario (the --scenario smoke path):
+    replays the named event stream for a handful of rounds so the tier-1
+    suite / CI can exercise the subsystem without the full benchmark."""
+    from repro.fed.scenarios import make_scenario, run_scenario
+
+    sc = make_scenario(name, seed=seed)
+    t0 = time.perf_counter()
+    _, summary = run_scenario(sc, mode="device", n_rounds=rounds,
+                              eval_every=max(1, rounds // 2))
+    summary["wall_s"] = round(time.perf_counter() - t0, 3)
+    return summary
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -18,10 +32,26 @@ def main() -> None:
     ap.add_argument("--skip-tables", action="store_true")
     ap.add_argument("--skip-engine", action="store_true",
                     help="skip the rounds/sec engine benchmark")
+    ap.add_argument("--skip-stream", action="store_true",
+                    help="skip the streaming-participation benchmark")
     ap.add_argument("--bench-json", default="BENCH_engine.json",
                     help="where to write the machine-readable engine "
                          "benchmark (default: BENCH_engine.json)")
+    ap.add_argument("--stream-json", default="BENCH_stream.json",
+                    help="where to write the streaming benchmark "
+                         "(default: BENCH_stream.json)")
+    ap.add_argument("--scenario", default=None, metavar="NAME",
+                    help="smoke mode: run only a tiny named streaming "
+                         "scenario end-to-end and exit (no benchmarks)")
     args = ap.parse_args()
+
+    if args.scenario is not None:
+        summary = scenario_smoke(args.scenario)
+        print("# scenario smoke: key,value")
+        for k, v in summary.items():
+            if k != "events":
+                print(f"{k},{v}")
+        return
 
     print("# kernels: name,us_per_call,config")
     from benchmarks.kernels_bench import run_all as kern_all
@@ -42,6 +72,19 @@ def main() -> None:
         print(f"weighted_agg_single_launch_us,"
               f"{res['weighted_agg_single_launch_us']}")
         print(f"# wrote {args.bench_json}")
+        sys.stdout.flush()
+
+    if not args.skip_stream:
+        from benchmarks.stream_bench import main as stream_main
+        res = stream_main(args.stream_json)
+        print("\n# stream: mode,rounds_per_sec")
+        for mode, rps in res["rounds_per_sec"].items():
+            print(f"{mode},{rps}")
+        print(f"churn_overhead_fraction,{res['churn_overhead_fraction']}")
+        print(f"events_per_sec_absorbed,{res['events_per_sec_absorbed']}")
+        print(f"admit_us,{res['admit_us']}")
+        print(f"evict_us,{res['evict_us']}")
+        print(f"# wrote {args.stream_json}")
         sys.stdout.flush()
 
     if not args.skip_tables:

@@ -1,0 +1,142 @@
+"""Streaming-participation benchmark: events/sec absorbed and rounds/sec
+under churn, vs an event-free baseline on the same capacity-slotted
+engine.
+
+Two costs matter for the streaming subsystem:
+
+  * event absorption — admit(slot)/evict(slot) are one host->device
+    transfer + dynamic-update-slice each; measured as µs per event and
+    events/sec;
+  * sustained churn — rounds/sec while a continuous stream of arrivals,
+    departures, trace shifts and inactivity bursts keeps splitting spans
+    and re-staging membership state, vs the same fleet with no events
+    (span splitting is the only difference: the engine never rebuilds or
+    recompiles across events).
+
+Timing is best-of-k on a warm scheduler (compile excluded); emits
+BENCH_stream.json next to BENCH_engine.json so the perf trajectory stays
+machine-readable.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core.participation import TRACES
+from repro.fed.scenarios import (build_scheduler, make_scenario,
+                                 summarize_history, _make_clients)
+from repro.fed.stream import Arrival, Departure, InactivityBurst, TraceShift
+
+NO_EVAL = 10 ** 9
+
+
+def _admit_evict_us(engine, client, iters: int = 30):
+    """µs per admit / evict slot write (synchronous host cost)."""
+    slot = engine.capacity - 1
+    engine.admit(slot, client)            # warmup: compile the slot write
+    engine.evict(slot)
+    jax.block_until_ready(engine.s_cdf)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        engine.admit(slot, client)
+    jax.block_until_ready(engine.s_cdf)
+    admit_us = (time.perf_counter() - t0) / iters * 1e6
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        engine.evict(slot)
+    jax.block_until_ready(engine.s_cdf)
+    evict_us = (time.perf_counter() - t0) / iters * 1e6
+    return admit_us, evict_us
+
+
+def _churn_events(tau0: int, span: int, next_id: int, rep: int):
+    """One rep's worth of sustained churn: two brand-new arrivals that
+    depart again inside the span (net slot balance zero), a trace shift
+    and a cohort burst."""
+    fresh = _make_clients(2, seed=5000 + rep)
+    events = [
+        Arrival(tau0 + 2, client=fresh[0]),
+        Arrival(tau0 + 3, client=fresh[1]),
+        Departure(tau0 + span - 4, client_id=next_id, policy="exclude"),
+        Departure(tau0 + span - 3, client_id=next_id + 1,
+                  policy="exclude"),
+        TraceShift(tau0 + 5, client_id=0, trace=TRACES[(rep + 1) % 8]),
+        InactivityBurst(tau0 + 8, 3, (1, 2)),
+    ]
+    return events, next_id + 2
+
+
+def _rounds_per_sec(sch, span, reps, *, churn: bool):
+    # warmup absorbs the scenario's own events and compiles the chunks
+    sch.run(span, eval_every=NO_EVAL)
+    next_id = len(sch.clients)
+    best = float("inf")
+    for rep in range(reps):
+        if churn:
+            events, next_id = _churn_events(sch._next_tau, span, next_id,
+                                            rep)
+            sch.push(*events)
+        t0 = time.perf_counter()
+        sch.run(span, eval_every=NO_EVAL)
+        best = min(best, time.perf_counter() - t0)
+    return span / best
+
+
+def run(span=24, reps=5, seed=0, mode="device", chunk=16):
+    sc = make_scenario("flash-crowd", seed=seed)
+
+    # event-free baseline: same fleet/capacity, no events ever
+    static = build_scheduler(
+        make_scenario("flash-crowd", seed=seed), mode=mode,
+        chunk_size=chunk)
+    static._queue.clear()
+    rps_static = _rounds_per_sec(static, span, reps, churn=False)
+
+    churned = build_scheduler(sc, mode=mode, chunk_size=chunk)
+    rps_churn = _rounds_per_sec(churned, span, reps, churn=True)
+
+    admit_us, evict_us = _admit_evict_us(
+        static.engine, _make_clients(1, seed=seed + 1)[0])
+    cycle_us = admit_us + evict_us
+
+    # one full scenario replay for the record (honest NaN-filtered summary)
+    sch, summary = None, None
+    t0 = time.perf_counter()
+    sch = build_scheduler(make_scenario("flash-crowd", seed=seed),
+                          mode=mode, chunk_size=chunk)
+    sch.run(sc.n_rounds, eval_every=sc.eval_every)
+    scenario_wall = time.perf_counter() - t0
+    summary = summarize_history(sch.history)
+    summary.pop("events", None)
+
+    out = {
+        "config": {"scenario": "flash-crowd", "mode": mode, "span": span,
+                   "reps": reps, "chunk_size": chunk,
+                   "capacity": churned.engine.capacity,
+                   "backend": jax.default_backend()},
+        "rounds_per_sec": {"static": round(rps_static, 2),
+                           "churn": round(rps_churn, 2)},
+        "churn_overhead_fraction": round(
+            max(0.0, 1.0 - rps_churn / rps_static), 4),
+        "admit_us": round(admit_us, 1),
+        "evict_us": round(evict_us, 1),
+        "events_per_sec_absorbed": round(2e6 / cycle_us, 1),
+        "scenario_replay": {"wall_s": round(scenario_wall, 3),
+                            **summary},
+    }
+    return out
+
+
+def main(path="BENCH_stream.json", **kw):
+    out = run(**kw)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=2))

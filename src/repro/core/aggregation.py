@@ -28,7 +28,10 @@ def scheme_coefficients(scheme: str, p: jnp.ndarray, s: jnp.ndarray,
     if scheme == "A":
         complete = (s >= E).astype(jnp.float32)
         K = jnp.sum(complete)
-        N = p.shape[0]
+        # N is the number of devices in the objective (p > 0), not the
+        # buffer length: capacity-slotted engines carry empty columns
+        # with p = 0 that must not inflate the coefficients
+        N = jnp.sum((p > 0).astype(jnp.float32))
         return jnp.where(K > 0, N * p * complete / jnp.maximum(K, 1.0), 0.0)
     if scheme == "B":
         return p * (s > 0)

@@ -1,4 +1,9 @@
 from repro.fed.driver import Client, FederatedTrainer, RoundRecord
 from repro.fed.engine import RoundEngine
+from repro.fed.stream import (Arrival, Departure, InactivityBurst,
+                              ParticipationEvent, StreamScheduler,
+                              TraceShift)
 
-__all__ = ["Client", "FederatedTrainer", "RoundRecord", "RoundEngine"]
+__all__ = ["Client", "FederatedTrainer", "RoundRecord", "RoundEngine",
+           "Arrival", "Departure", "InactivityBurst", "ParticipationEvent",
+           "StreamScheduler", "TraceShift"]

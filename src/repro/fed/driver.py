@@ -77,7 +77,9 @@ class FederatedTrainer:
                  horizon: Optional[int] = None,
                  bound_terms: Optional[BoundTerms] = None,
                  seed: int = 0, engine: Optional[str] = "plan",
-                 chunk_size: int = 16, agg: str = "auto"):
+                 chunk_size: int = 16, agg: str = "auto",
+                 interpret=None, donate: Optional[bool] = None,
+                 with_metrics: bool = False):
         self.loss_fn = loss_fn
         self.eval_fn = eval_fn  # eval_fn(params, x, y) -> (loss, acc)
         self.params = init_params
@@ -101,17 +103,17 @@ class FederatedTrainer:
                              f"got {engine!r}")
         self.chunk_size = chunk_size
         self.agg = agg
+        self.interpret = interpret
+        self.donate = donate
+        self.with_metrics = with_metrics
         self._engine: Optional[RoundEngine] = None
+        self._scheduler = None
         self._key = jax.random.PRNGKey(seed)
         # membership bookkeeping
         self.objective: set = {i for i, c in enumerate(clients)
                                if c.active_from == 0}
         self.reboots: List[RebootState] = []
         self.lr_shift_tau = 0
-        # per-client reboot state in array form for the engine: a client
-        # that never rebooted has boost 1 (multiplier exactly 1)
-        self._rb_tau0 = np.zeros(len(clients), np.int32)
-        self._rb_boost = np.ones(len(clients), np.float32)
         self.history: List[RoundRecord] = []
         self._next_tau = 0
 
@@ -121,7 +123,9 @@ class FederatedTrainer:
             self._engine = RoundEngine(
                 loss_fn=self.loss_fn, clients=self.clients,
                 local_epochs=self.E, batch_size=self.B, scheme=self.scheme,
-                eta0=self.eta0, chunk_size=self.chunk_size, agg=self.agg)
+                eta0=self.eta0, chunk_size=self.chunk_size, agg=self.agg,
+                interpret=self.interpret, donate=self.donate,
+                with_metrics=self.with_metrics)
         return self._engine
 
     # -- weights over the current objective set -----------------------------
@@ -176,8 +180,6 @@ class FederatedTrainer:
                 if self.fast_reboot:
                     self.reboots.append(RebootState(tau, i,
                                                     self.reboot_boost))
-                    self._rb_tau0[i] = tau
-                    self._rb_boost[i] = self.reboot_boost
                 ev += f"arrival:{i};"
             if cl.departs_at == tau and i in self.objective:
                 policy = cl.departure_policy
@@ -194,15 +196,6 @@ class FederatedTrainer:
                 else:
                     ev += f"departure-include:{i};"
         return ev
-
-    def _event_taus(self):
-        taus = set()
-        for cl in self.clients:
-            if cl.active_from > 0:
-                taus.add(cl.active_from)
-            if cl.departs_at is not None:
-                taus.add(cl.departs_at)
-        return taus
 
     # -- main loop ------------------------------------------------------------
     def run(self, n_rounds: int, eval_every: int = 1):
@@ -237,65 +230,50 @@ class FederatedTrainer:
         self._next_tau = start + n_rounds
         return self.history
 
-    def _span_end(self, tau: int, stop: int, ev: str,
-                  eval_every: int) -> int:
-        """Largest t <= stop such that [tau, t) has fixed membership and at
-        most one eval, which lands on the final round of the span."""
-        end = stop
-        for t in self._event_taus():
-            if tau < t < end:
-                end = t
-        if ev:
-            return tau + 1  # event round: evaluate right after it
-        next_eval = tau + ((-tau) % eval_every)
-        if next_eval < end:
-            end = next_eval + 1
-        return end
+    def _stream_scheduler(self):
+        """The engine path delegates to the streaming subsystem
+        (fed/stream.py): the precomputed Client.active_from/departs_at
+        schedule is translated into an event stream once, and the
+        StreamScheduler owns span splitting, weights/reboot/LR
+        recomputation and history.  The trainer is a thin adapter: it
+        shares its clients/engine/RNG/history with the scheduler and
+        mirrors membership state back after each run.  (Don't mix
+        engine-mode and host-mode run() calls on one trainer — the
+        scheduler tracks its own round clock.)"""
+        if self._scheduler is None:
+            from repro.fed.stream import (Arrival, Departure,
+                                          StreamScheduler)
+            events = []
+            for i, cl in enumerate(self.clients):
+                if cl.active_from > 0:
+                    events.append(Arrival(cl.active_from, client_id=i))
+                if cl.departs_at is not None:
+                    events.append(Departure(cl.departs_at, client_id=i))
+
+            def eval_cb(params):
+                self.params = params
+                return self.evaluate()
+
+            self._scheduler = StreamScheduler(
+                clients=self.clients, init_params=self.params,
+                engine=self.engine, mode=self.engine_mode,
+                reboot_boost=self.reboot_boost,
+                fast_reboot=self.fast_reboot, horizon=self.horizon,
+                bound_terms=self.bound_terms, rng=self.rng,
+                key=self._key, evaluate=eval_cb, history=self.history,
+                reboots=self.reboots, objective=self.objective,
+                events=events)
+        return self._scheduler
 
     def _run_engine(self, n_rounds: int, eval_every: int = 1):
-        eng = self.engine
-        start = self._next_tau
-        stop = start + n_rounds
-        tau = start
-        span_args = None
-        while tau < stop:
-            ev = self._handle_events(tau)
-            end = self._span_end(tau, stop, ev, eval_every)
-            R = end - tau
-            if span_args is None or ev:
-                # membership/reboot/LR state only changes at events, so the
-                # device-staged span arguments are reused across spans
-                p = self.data_weights()
-                active = np.array(
-                    [1.0 if self._participating(i, tau) else 0.0
-                     for i in range(len(self.clients))], np.float32)
-                span_args = dict(p=jnp.asarray(p, jnp.float32),
-                                 active=jnp.asarray(active),
-                                 lr_shift_tau=self.lr_shift_tau,
-                                 reboot_tau0=jnp.asarray(self._rb_tau0),
-                                 reboot_boost=jnp.asarray(self._rb_boost))
-            kwargs = span_args
-            if self.engine_mode == "device":
-                self._key, sub = jax.random.split(self._key)
-                self.params, m = eng.run_span(self.params, tau, R,
-                                              key=sub, **kwargs)
-            else:
-                plans = [self._sample_plan(t) for t in range(tau, end)]
-                alphas = np.stack([pl[0] for pl in plans])
-                idxs = np.stack([pl[1] for pl in plans])
-                self.params, m = eng.run_span(self.params, tau, R,
-                                              plan=(alphas, idxs), **kwargs)
-            eval_last = (end - 1) % eval_every == 0 or (ev and R == 1)
-            for j, t in enumerate(range(tau, end)):
-                loss = acc = float("nan")
-                if eval_last and t == end - 1:
-                    loss, acc = self.evaluate()
-                s = m["s"][j]
-                self.history.append(RoundRecord(
-                    t, float(loss), float(acc), float(m["eta"][j]),
-                    int((s > 0).sum()), s, ev if t == tau else ""))
-            tau = end
-        self._next_tau = stop
+        sch = self._stream_scheduler()
+        sch.params = self.params
+        sch.run(n_rounds, eval_every)
+        # mirror scheduler state onto the legacy public attributes
+        # (objective/reboots/history are shared objects already)
+        self.params = sch.params
+        self.lr_shift_tau = sch.lr_shift_tau
+        self._next_tau = sch._next_tau
         return self.history
 
     def evaluate(self, include_idx: Optional[set] = None):

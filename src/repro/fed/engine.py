@@ -30,6 +30,7 @@ arrival/departure events and evaluation at chunk boundaries.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -51,44 +52,56 @@ def _pow2_chunks(n: int, cap: int):
     return out
 
 
-def trace_s_cdf(clients, E: int) -> np.ndarray:
-    """Per-client CDF table of completed epochs s: (C, E+1) with
-    cdf[c, k] = P(s_c <= k).
+@functools.lru_cache(maxsize=1024)
+def trace_cdf_row(trace, E: int) -> np.ndarray:
+    """CDF table of completed epochs s for one trace: (E+1,) with
+    cdf[k] = P(s <= k).  Cached per (trace, E) — traces are frozen
+    dataclasses and the betainc evaluation dominates admit() otherwise;
+    callers must not mutate the returned array.
 
     s = round(frac * E) for frac ~ Beta(a, b) mixed with an inactivity
     atom at 0, so the s-law is a discrete distribution over {0..E} whose
     CDF is exact regularized-incomplete-beta evaluations at the rounding
-    boundaries (k + 1/2)/E — computed once at engine build time, which
-    removes the gamma rejection sampler from the hot path entirely while
-    sampling the *identical* distribution as Trace.sample_s.
+    boundaries (k + 1/2)/E — computed once at engine build / admit time,
+    which removes the gamma rejection sampler from the hot path entirely
+    while sampling the *identical* distribution as Trace.sample_s.
     """
     from jax.scipy.special import betainc
 
-    C = len(clients)
-    cdf = np.zeros((C, E + 1), np.float64)
     ks = np.arange(E + 1)
-    for c_i, cl in enumerate(clients):
-        t = cl.trace
-        ab = t._beta_params()
-        if ab is None:
-            # degenerate trace: frac == mean deterministically
-            s0 = int(np.clip(np.round(t.mean * E), 0, E))
-            base = (ks >= s0).astype(np.float64)
-        else:
-            x = np.clip((ks + 0.5) / E, 0.0, 1.0)
-            base = np.asarray(betainc(ab[0], ab[1], x), np.float64)
-            base[-1] = 1.0
-        q = t.p_inactive
-        if q > 0:
-            # inactive rounds put an atom at s = 0
-            cdf[c_i] = q + (1.0 - q) * base
-        else:
-            # CPU-contention traces never produce zero epochs: the s=0
-            # mass moves to s=1 (Trace.sample_s's maximum(s, 1))
-            cdf[c_i] = base
-            cdf[c_i, 0] = 0.0
-        cdf[c_i, -1] = 1.0
-    return cdf.astype(np.float32)
+    ab = trace._beta_params()
+    if ab is None:
+        # degenerate trace: frac == mean deterministically
+        s0 = int(np.clip(np.round(trace.mean * E), 0, E))
+        base = (ks >= s0).astype(np.float64)
+    else:
+        x = np.clip((ks + 0.5) / E, 0.0, 1.0)
+        base = np.asarray(betainc(ab[0], ab[1], x), np.float64)
+        base[-1] = 1.0
+    q = trace.p_inactive
+    if q > 0:
+        # inactive rounds put an atom at s = 0
+        row = q + (1.0 - q) * base
+    else:
+        # CPU-contention traces never produce zero epochs: the s=0
+        # mass moves to s=1 (Trace.sample_s's maximum(s, 1))
+        row = base.copy()
+        row[0] = 0.0
+    row[-1] = 1.0
+    return row.astype(np.float32)
+
+
+# an empty slot's s-law: all mass at s = 0, so the slot never trains even
+# before the scheduler's active mask is applied
+def empty_slot_cdf(E: int) -> np.ndarray:
+    return np.ones(E + 1, np.float32)
+
+
+def trace_s_cdf(clients, E: int) -> np.ndarray:
+    """Per-client CDF table of completed epochs s: (C, E+1) with
+    cdf[c, k] = P(s_c <= k).  See trace_cdf_row."""
+    return np.stack([trace_cdf_row(cl.trace, E) for cl in clients]) \
+        if clients else np.zeros((0, E + 1), np.float32)
 
 
 def device_sample_span(key, R: int, active, n, s_cdf, E: int, B: int):
@@ -114,6 +127,15 @@ def device_sample_span(key, R: int, active, n, s_cdf, E: int, B: int):
     return alphas, idxs
 
 
+def _slot_write(buf, row, slot):
+    """dynamic-update-slice of one leading-axis row (jitted; one trace per
+    buffer dtype/shape, reused for every admit/evict/set_trace)."""
+    return jax.lax.dynamic_update_index_in_dim(buf, row, slot, axis=0)
+
+
+_slot_write = jax.jit(_slot_write)
+
+
 class RoundEngine:
     """Runs R federated rounds per host dispatch on device-resident data.
 
@@ -121,13 +143,24 @@ class RoundEngine:
     constant within a span (the trainer splits spans at every event), so
     they enter the chunk as plain array arguments — values change between
     chunks without recompiling.
+
+    Capacity slots: with ``capacity=C_max`` the engine preallocates C_max
+    client slots (data/size/trace-CDF buffers have a C_max leading axis);
+    slots beyond the founding clients start empty (n=1, s-law all mass at
+    0).  ``admit(slot, client)`` / ``evict(slot)`` / ``set_trace(slot,
+    trace)`` mutate one slot with a single host->device transfer plus a
+    dynamic-update-slice each — buffer shapes never change, so the
+    compiled span scans are reused across arbitrarily many membership
+    events (no rebuild, no recompile).
     """
 
     def __init__(self, *, loss_fn, clients, local_epochs: int,
                  batch_size: int, scheme: str = "C", eta0: float = 0.01,
                  chunk_size: int = 16, agg: str = "auto",
                  interpret=None, donate: Optional[bool] = None,
-                 with_metrics: bool = False):
+                 with_metrics: bool = False,
+                 capacity: Optional[int] = None,
+                 max_samples: Optional[int] = None):
         self.loss_fn = loss_fn
         self.E = local_epochs
         self.B = batch_size
@@ -146,20 +179,87 @@ class RoundEngine:
         self.donate = donate
 
         C = len(clients)
+        if C == 0:
+            raise ValueError("RoundEngine needs at least one founding "
+                             "client (fixes the feature shape)")
+        if capacity is None:
+            capacity = C
+        if capacity < C:
+            raise ValueError(f"capacity {capacity} < {C} founding clients")
+        self.capacity = capacity
         ns = [c.n for c in clients]
         nmax = max(ns)
+        if max_samples is not None:
+            nmax = max(nmax, max_samples)
+        self.nmax = nmax
         x0 = np.asarray(clients[0].x)
-        X = np.zeros((C, nmax) + x0.shape[1:], np.float32)
-        Y = np.zeros((C, nmax), np.int32)
+        self._xdim = x0.shape[1:]
+        X = np.zeros((capacity, nmax) + self._xdim, np.float32)
+        Y = np.zeros((capacity, nmax), np.int32)
+        # empty slots keep n=1 so the batch-index draw idx = min(u*n, n-1)
+        # stays a valid gather (their alpha/coeff are 0 regardless)
+        n_arr = np.ones(capacity, np.int32)
+        cdf = np.tile(empty_slot_cdf(self.E), (capacity, 1))
         for i, c in enumerate(clients):
             X[i, :c.n] = c.x
             Y[i, :c.n] = c.y
+            n_arr[i] = c.n
+        cdf[:C] = trace_s_cdf(clients, self.E)
         # datasets move host->device exactly once, here
         self.data_x = jax.device_put(X)
         self.data_y = jax.device_put(Y)
-        self.n = jax.device_put(np.asarray(ns, np.int32))
-        self.s_cdf = jax.device_put(trace_s_cdf(clients, self.E))
+        self.n = jax.device_put(n_arr)
+        self.s_cdf = jax.device_put(cdf)
         self._fns = {}
+
+    # -- capacity-slot lifecycle ----------------------------------------------
+    def admit(self, slot: int, client) -> None:
+        """Stage a client's data/size/trace-CDF into an engine slot: one
+        host->device transfer + dynamic-update-slice per buffer.  The
+        client may be brand new (constructed after engine build) — shapes
+        are static, so no compiled span scan is invalidated."""
+        if not 0 <= slot < self.capacity:
+            raise IndexError(f"slot {slot} out of range [0, {self.capacity})")
+        if client.n > self.nmax:
+            raise ValueError(
+                f"client has {client.n} samples > slot capacity "
+                f"{self.nmax}; build the engine with max_samples >= "
+                f"{client.n}")
+        x = np.asarray(client.x, np.float32)
+        if x.shape[1:] != self._xdim:
+            raise ValueError(f"feature shape {x.shape[1:]} != engine "
+                             f"feature shape {self._xdim}")
+        xrow = np.zeros((self.nmax,) + self._xdim, np.float32)
+        yrow = np.zeros(self.nmax, np.int32)
+        xrow[:client.n] = x
+        yrow[:client.n] = client.y
+        s = jnp.int32(slot)
+        self.data_x = _slot_write(self.data_x, jax.device_put(xrow), s)
+        self.data_y = _slot_write(self.data_y, jax.device_put(yrow), s)
+        self.n = _slot_write(self.n, jnp.int32(client.n), s)
+        self.s_cdf = _slot_write(
+            self.s_cdf, jax.device_put(trace_cdf_row(client.trace, self.E)),
+            s)
+
+    def evict(self, slot: int) -> None:
+        """Free a slot: its s-law collapses to the empty-slot atom at 0
+        and n drops to 1 (keeps gathers valid).  Stale data stays on
+        device — it is unreachable (alpha=0, coeff=0) until the next
+        admit overwrites it."""
+        if not 0 <= slot < self.capacity:
+            raise IndexError(f"slot {slot} out of range [0, {self.capacity})")
+        s = jnp.int32(slot)
+        self.n = _slot_write(self.n, jnp.int32(1), s)
+        self.s_cdf = _slot_write(
+            self.s_cdf, jax.device_put(empty_slot_cdf(self.E)), s)
+
+    def set_trace(self, slot: int, trace) -> None:
+        """Swap the availability law of an occupied slot (TraceShift)."""
+        if not 0 <= slot < self.capacity:
+            raise IndexError(f"slot {slot} out of range [0, {self.capacity})")
+        self.s_cdf = _slot_write(
+            self.s_cdf, jax.device_put(trace_cdf_row(trace, self.E)),
+            jnp.int32(slot))
 
     # -- jitted chunk builders ------------------------------------------------
     def _round_core(self, params, data_x, data_y, alpha, idx, tau, p,
@@ -227,6 +327,11 @@ class RoundEngine:
         """
         if (plan is None) == (key is None):
             raise ValueError("pass exactly one of plan= or key=")
+        if n_rounds <= 0:
+            # degenerate span: params unchanged, empty per-round metrics
+            return params, {"s": np.zeros((0, self.capacity), np.float32),
+                            "eta": np.zeros(0, np.float32),
+                            "delta_norm": np.zeros(0, np.float32)}
         p = jnp.asarray(p, jnp.float32)
         active = jnp.asarray(active, jnp.float32)
         rb_tau0 = jnp.asarray(reboot_tau0, jnp.int32)

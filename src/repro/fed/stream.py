@@ -1,0 +1,438 @@
+"""Streaming participation: an event queue driving capacity-slotted spans.
+
+The paper's core claim is that devices may "depart or arrive in the middle
+of training" — yet FederatedTrainer required every arrival/departure to be
+declared at construction time (Client.active_from / departs_at).  This
+module makes participation an external *stream* (cf. Gu et al. 2021 on
+arbitrary device unavailability; Wang & Ji 2022 on arbitrary client
+participation):
+
+  * typed ParticipationEvents — Arrival (carrying a brand-new client's
+    data and trace, admitted into a free engine slot), Departure (with the
+    paper's include/exclude/auto §4.3 policy), TraceShift (a client's
+    availability law changes), InactivityBurst (a cohort masked for a
+    window — correlated unavailability);
+  * a StreamScheduler that coalesces pending events at span boundaries,
+    recomputes weights / reboot / LR-restart state, and drives
+    RoundEngine.run_span.  Between events, R rounds run per host dispatch
+    on device-resident data; events cost one slot write each, never an
+    engine rebuild or a scan recompile.
+
+FederatedTrainer (fed/driver.py) is a thin adapter over this scheduler:
+it translates its precomputed Client.active_from/departs_at schedule into
+an event stream at the first engine run, so the legacy API and the
+streaming API share one span-splitting implementation.
+
+Event application semantics: events are applied at the first span boundary
+with tau >= event.tau (spans always break at queued event taus, so an
+event pushed before run() fires on its exact round; an event pushed with a
+tau already in the past fires at the next boundary — the honest streaming
+behavior for late-arriving news).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arrivals import RebootState
+from repro.core.departures import BoundTerms, should_exclude
+from repro.core.participation import Trace
+from repro.fed.driver import Client, RoundRecord
+from repro.fed.engine import RoundEngine
+
+
+# -- the event model ----------------------------------------------------------
+
+@dataclass(frozen=True)
+class Arrival:
+    """A device joins training at round tau.
+
+    Either ``client`` is a brand-new Client (constructed after the engine
+    was built; admitted into a free capacity slot), or ``client_id``
+    references an already-registered client (activation only — the path
+    the FederatedTrainer adapter uses for precomputed schedules).
+    """
+    tau: int
+    client: Optional[Client] = None
+    client_id: Optional[int] = None
+    fast_reboot: Optional[bool] = None   # None => scheduler default
+
+
+@dataclass(frozen=True)
+class Departure:
+    """A device leaves at round tau.  policy: include | exclude | auto
+    (Corollary 4.0.3 remaining-time criterion); None uses the client's
+    own departure_policy."""
+    tau: int
+    client_id: int
+    policy: Optional[str] = None
+
+
+@dataclass(frozen=True)
+class TraceShift:
+    """A client's availability law changes at round tau (e.g. a device
+    moves from charger+wifi to battery+cellular)."""
+    tau: int
+    client_id: int
+    trace: Trace
+
+
+@dataclass(frozen=True)
+class InactivityBurst:
+    """A cohort goes dark for ``duration`` rounds starting at tau
+    (correlated unavailability: a regional outage, a synchronized OS
+    update).  Masked clients stay in the objective — their weight mass is
+    unchanged — but contribute s = 0 until the burst expires."""
+    tau: int
+    duration: int
+    client_ids: Tuple[int, ...]
+
+
+ParticipationEvent = Union[Arrival, Departure, TraceShift, InactivityBurst]
+
+
+# -- the scheduler ------------------------------------------------------------
+
+class StreamScheduler:
+    """Consumes a stream of ParticipationEvents while driving
+    RoundEngine.run_span over the event-free gaps.
+
+    Scheduling loop: at each span start, pop every queued event with
+    tau <= now and apply it (slot admit/evict, objective shift, reboot
+    boost, LR restart, trace swap, burst masking); then run rounds until
+    the next event tau / burst expiry / eval round, whichever is first.
+    Membership-derived span arguments (weights p, active mask, reboot
+    arrays) are recomputed only when an event dirtied them.
+
+    mode="device": fully fused on-device sampling (the fast path).
+    mode="plan":   host numpy-RNG sampling in the seed draw order —
+                   sample-for-sample identical to the legacy host loop,
+                   used by the trainer-parity tests.
+    """
+
+    def __init__(self, *, clients: Sequence[Client], init_params,
+                 engine: Optional[RoundEngine] = None,
+                 loss_fn: Optional[Callable] = None,
+                 eval_fn: Optional[Callable] = None,
+                 capacity: Optional[int] = None,
+                 max_samples: Optional[int] = None,
+                 local_epochs: int = 5, batch_size: int = 10,
+                 scheme: str = "C", eta0: float = 0.01,
+                 chunk_size: int = 16, agg: str = "auto",
+                 interpret=None, donate: Optional[bool] = None,
+                 with_metrics: bool = False,
+                 reboot_boost: float = 3.0, fast_reboot: bool = True,
+                 horizon: Optional[int] = None,
+                 bound_terms: Optional[BoundTerms] = None,
+                 seed: int = 0, mode: str = "device",
+                 rng: Optional[np.random.Generator] = None,
+                 key=None, evaluate: Optional[Callable] = None,
+                 history: Optional[List[RoundRecord]] = None,
+                 reboots: Optional[List[RebootState]] = None,
+                 objective: Optional[set] = None,
+                 events: Sequence[ParticipationEvent] = ()):
+        if mode not in ("device", "plan"):
+            raise ValueError(f"mode must be device|plan, got {mode!r}")
+        self.mode = mode
+        self.clients: List[Client] = list(clients)
+        if engine is None:
+            engine = RoundEngine(
+                loss_fn=loss_fn, clients=self.clients,
+                local_epochs=local_epochs, batch_size=batch_size,
+                scheme=scheme, eta0=eta0, chunk_size=chunk_size, agg=agg,
+                interpret=interpret, donate=donate,
+                with_metrics=with_metrics, capacity=capacity,
+                max_samples=max_samples)
+        self.engine = engine
+        self.E = engine.E
+        self.B = engine.B
+        self.eta0 = engine.eta0
+        self.params = init_params
+        self.eval_fn = eval_fn
+        self._evaluate = evaluate          # optional external eval callback
+        self.reboot_boost = reboot_boost
+        self.fast_reboot = fast_reboot
+        self.horizon = horizon
+        self.bound_terms = bound_terms or BoundTerms(
+            D=5.0, V=20.0, gamma=10.0, E=self.E)
+        self.rng = rng if rng is not None else np.random.default_rng(seed)
+        self._key = key if key is not None else jax.random.PRNGKey(seed)
+
+        # slot registry: client id == index into self.clients; founding
+        # clients occupy slots 0..C-1 in id order
+        C = len(self.clients)
+        self.slot_of: Dict[int, int] = {i: i for i in range(C)}
+        self.client_at: Dict[int, int] = {i: i for i in range(C)}
+        self.free_slots: List[int] = list(range(C, engine.capacity))
+        heapq.heapify(self.free_slots)
+
+        # membership state
+        self.objective: set = (objective if objective is not None
+                               else set(range(C)))
+        self.joined: Dict[int, int] = {i: 0 for i in self.objective}
+        self.departed: set = set()
+        self.mask_until: Dict[int, int] = {}
+        self._expiry_taus: set = set()
+        self.lr_shift_tau = 0
+        self._rb_tau0 = np.zeros(engine.capacity, np.int32)
+        self._rb_boost = np.ones(engine.capacity, np.float32)
+        self.reboots: List[RebootState] = (reboots if reboots is not None
+                                           else [])
+        self.history: List[RoundRecord] = (history if history is not None
+                                           else [])
+
+        # the event queue (heap keyed by (tau, arrival order))
+        self._queue: List[Tuple[int, int, ParticipationEvent]] = []
+        self._seq = itertools.count()
+        self._next_tau = 0
+        self._span_args = None
+        self._dirty = True
+        self.events_applied = 0
+        self.push(*events)
+
+    # -- queue ---------------------------------------------------------------
+    def push(self, *events: ParticipationEvent) -> None:
+        """Enqueue participation events (any order; any time — including
+        between run() calls, which is the streaming use case)."""
+        for e in events:
+            heapq.heappush(self._queue, (e.tau, next(self._seq), e))
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- membership ----------------------------------------------------------
+    def _active(self, i: int, tau: int) -> bool:
+        return (i in self.objective and i not in self.departed
+                and self.joined.get(i, tau + 1) <= tau
+                and self.mask_until.get(i, tau) <= tau)
+
+    def _register(self, client: Client) -> int:
+        self.clients.append(client)
+        return len(self.clients) - 1
+
+    def _alloc_slot(self, i: int) -> int:
+        if not self.free_slots:
+            raise RuntimeError(
+                f"engine capacity {self.engine.capacity} exhausted: no "
+                f"free slot for arriving client {i} (build the engine "
+                f"with a larger capacity=)")
+        slot = heapq.heappop(self.free_slots)
+        self.slot_of[i] = slot
+        self.client_at[slot] = i
+        return slot
+
+    def _free_slot(self, i: int) -> None:
+        slot = self.slot_of.pop(i, None)
+        if slot is None:
+            return
+        del self.client_at[slot]
+        self.engine.evict(slot)
+        self._rb_tau0[slot] = 0
+        self._rb_boost[slot] = 1.0
+        heapq.heappush(self.free_slots, slot)
+
+    # -- event application ----------------------------------------------------
+    def _apply(self, e: ParticipationEvent, tau: int) -> str:
+        if isinstance(e, Arrival):
+            if e.client is not None:
+                i = self._register(e.client)
+                slot = self._alloc_slot(i)
+                self.engine.admit(slot, e.client)
+            else:
+                i = e.client_id
+                if i is None or not 0 <= i < len(self.clients):
+                    raise ValueError(f"Arrival without client needs a "
+                                     f"registered client_id, got {i!r}")
+                if i not in self.slot_of:
+                    slot = self._alloc_slot(i)
+                    self.engine.admit(slot, self.clients[i])
+            if i in self.objective:
+                if i not in self.departed:
+                    return ""                   # duplicate arrival: no-op
+                # rejoin of an include-departed device: the objective
+                # never shifted, so no LR restart / reboot boost — the
+                # device simply resumes participating
+                self.departed.discard(i)
+                self.joined[i] = tau
+                return f"rejoin:{i};"
+            self.objective.add(i)
+            self.joined[i] = tau
+            self.departed.discard(i)
+            self.lr_shift_tau = tau
+            fast = self.fast_reboot if e.fast_reboot is None else \
+                e.fast_reboot
+            if fast:
+                self.reboots.append(RebootState(tau, i, self.reboot_boost))
+                slot = self.slot_of[i]
+                self._rb_tau0[slot] = tau
+                self._rb_boost[slot] = self.reboot_boost
+            return f"arrival:{i};"
+
+        if isinstance(e, Departure):
+            i = e.client_id
+            if i not in self.objective or i in self.departed:
+                return ""                       # duplicate/unknown: no-op
+            cl = self.clients[i]
+            policy = e.policy or cl.departure_policy
+            if policy == "auto":
+                # Corollary 4.0.3: exclude iff enough training remains
+                T = self.horizon if self.horizon is not None else tau + 100
+                policy = "exclude" if should_exclude(
+                    T, tau, self.bound_terms, cl.gamma_l) else "include"
+            self.departed.add(i)
+            self._free_slot(i)
+            if policy == "exclude":
+                self.objective.discard(i)
+                self.lr_shift_tau = tau
+                return f"departure-exclude:{i};"
+            return f"departure-include:{i};"
+
+        if isinstance(e, TraceShift):
+            i = e.client_id
+            self.clients[i].trace = e.trace     # plan-mode draws follow
+            slot = self.slot_of.get(i)
+            if slot is not None:
+                self.engine.set_trace(slot, e.trace)
+            return f"trace-shift:{i};"
+
+        if isinstance(e, InactivityBurst):
+            until = tau + e.duration
+            for i in e.client_ids:
+                self.mask_until[i] = max(self.mask_until.get(i, 0), until)
+            self._expiry_taus.add(until)
+            ids = ",".join(str(i) for i in e.client_ids)
+            return f"burst:{ids}@{e.duration};"
+
+        raise TypeError(f"unknown participation event {e!r}")
+
+    def _apply_events(self, tau: int) -> str:
+        ev = ""
+        while self._queue and self._queue[0][0] <= tau:
+            _, _, e = heapq.heappop(self._queue)
+            ev += self._apply(e, tau)
+            self.events_applied += 1
+        if tau in self._expiry_taus:
+            self._expiry_taus.discard(tau)
+            self._dirty = True                  # masked cohort resumes
+        if ev:
+            self._dirty = True
+        return ev
+
+    # -- span arguments -------------------------------------------------------
+    def data_weights(self) -> np.ndarray:
+        """Slot-indexed data weights p over the current objective.  An
+        include-departed client keeps its mass in the normalization (the
+        paper's §4.3 'include' keeps the old objective) but holds no
+        slot, so its column simply never appears — arithmetically
+        identical to a zero-coefficient column."""
+        p = np.zeros(self.engine.capacity)
+        total = sum(self.clients[i].n for i in self.objective)
+        for i in self.objective:
+            slot = self.slot_of.get(i)
+            if slot is not None:
+                p[slot] = self.clients[i].n / total
+        return p
+
+    def _build_span_args(self, tau: int):
+        p = self.data_weights()
+        active = np.zeros(self.engine.capacity, np.float32)
+        for slot, i in self.client_at.items():
+            if self._active(i, tau):
+                active[slot] = 1.0
+        return dict(p=jnp.asarray(p, jnp.float32),
+                    active=jnp.asarray(active),
+                    lr_shift_tau=self.lr_shift_tau,
+                    reboot_tau0=jnp.asarray(self._rb_tau0),
+                    reboot_boost=jnp.asarray(self._rb_boost))
+
+    def _span_end(self, tau: int, stop: int, ev: str,
+                  eval_every: int) -> int:
+        """Largest t <= stop such that [tau, t) has fixed membership and
+        at most one eval, which lands on the final round of the span."""
+        end = stop
+        if self._queue:
+            end = min(end, max(self._queue[0][0], tau + 1))
+        for t in self._expiry_taus:
+            if tau < t < end:
+                end = t
+        if ev:
+            return tau + 1      # event round: evaluate right after it
+        next_eval = tau + ((-tau) % eval_every)
+        if next_eval < end:
+            end = next_eval + 1
+        return end
+
+    # -- plan-mode sampling (seed RNG draw order) -----------------------------
+    def _sample_plan(self, tau: int):
+        Cs = self.engine.capacity
+        alpha = np.zeros((Cs, self.E), np.float32)
+        idx = np.zeros((Cs, self.E, self.B), np.int64)
+        for slot in range(Cs):
+            i = self.client_at.get(slot)
+            if i is None or not self._active(i, tau):
+                continue
+            cl = self.clients[i]
+            alpha[slot] = (np.arange(self.E)
+                           < cl.trace.sample_s(self.rng, self.E)
+                           ).astype(np.float32)
+            idx[slot] = self.rng.integers(0, cl.n, size=(self.E, self.B))
+        return alpha, idx
+
+    # -- evaluation -----------------------------------------------------------
+    def evaluate(self):
+        if self._evaluate is not None:
+            return self._evaluate(self.params)
+        if self.eval_fn is None:
+            return float("nan"), float("nan")
+        xs = [self.clients[i].x_test for i in sorted(self.objective)
+              if self.clients[i].x_test is not None]
+        ys = [self.clients[i].y_test for i in sorted(self.objective)
+              if self.clients[i].y_test is not None]
+        if not xs:
+            return float("nan"), float("nan")
+        return self.eval_fn(self.params, jnp.asarray(np.concatenate(xs)),
+                            jnp.asarray(np.concatenate(ys)))
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, n_rounds: int, eval_every: int = 1):
+        eng = self.engine
+        start = self._next_tau
+        stop = start + n_rounds
+        tau = start
+        while tau < stop:
+            ev = self._apply_events(tau)
+            end = self._span_end(tau, stop, ev, eval_every)
+            R = end - tau
+            if self._span_args is None or self._dirty:
+                self._span_args = self._build_span_args(tau)
+                self._dirty = False
+            kwargs = self._span_args
+            if self.mode == "device":
+                self._key, sub = jax.random.split(self._key)
+                self.params, m = eng.run_span(self.params, tau, R,
+                                              key=sub, **kwargs)
+            else:
+                plans = [self._sample_plan(t) for t in range(tau, end)]
+                alphas = np.stack([pl[0] for pl in plans])
+                idxs = np.stack([pl[1] for pl in plans])
+                self.params, m = eng.run_span(self.params, tau, R,
+                                              plan=(alphas, idxs), **kwargs)
+            eval_last = (end - 1) % eval_every == 0 or (ev and R == 1)
+            for j, t in enumerate(range(tau, end)):
+                loss = acc = float("nan")
+                if eval_last and t == end - 1:
+                    loss, acc = self.evaluate()
+                s = m["s"][j]
+                self.history.append(RoundRecord(
+                    t, float(loss), float(acc), float(m["eta"][j]),
+                    int((s > 0).sum()), s, ev if t == tau else ""))
+            tau = end
+        self._next_tau = stop
+        return self.history

@@ -187,6 +187,42 @@ def test_accumulate_delta_accepts_plain_float():
     np.testing.assert_allclose(np.asarray(out2["w"]), 2.0)
 
 
+def test_run_span_zero_rounds():
+    """Regression: n_rounds == 0 used to crash on ms[0] of an empty
+    metrics list; it must return params unchanged with empty metrics."""
+    clients = make_clients(4)
+    eng = RoundEngine(loss_fn=make_loss_fn(CFG), clients=clients,
+                      local_epochs=5, batch_size=4)
+    params = init_small(jax.random.PRNGKey(0), CFG)
+    C = len(clients)
+    for kw in (dict(key=jax.random.PRNGKey(1)),
+               dict(plan=(np.zeros((0, C, 5), np.float32),
+                          np.zeros((0, C, 5, 4), np.int64)))):
+        out, m = eng.run_span(params, 3, 0, p=np.ones(C) / C,
+                              active=np.ones(C), lr_shift_tau=0,
+                              reboot_tau0=np.zeros(C, np.int32),
+                              reboot_boost=np.ones(C, np.float32), **kw)
+        assert_params_close(params, out, rtol=0, atol=0)
+        assert m["s"].shape == (0, C)
+        assert m["eta"].shape == (0,)
+        assert m["delta_norm"].shape == (0,)
+
+
+def test_trainer_plumbs_engine_options():
+    """Satellite: interpret/donate/with_metrics reach the RoundEngine the
+    trainer constructs (they were silently dropped before)."""
+    tr = make_trainer(make_clients(4), engine="plan", interpret=False,
+                      donate=False, with_metrics=True)
+    eng = tr.engine
+    assert eng.interpret is False
+    assert eng.donate is False
+    assert eng.with_metrics is True
+    # defaults still resolve (donate=None -> backend-dependent bool)
+    tr2 = make_trainer(make_clients(4), engine="plan")
+    assert isinstance(tr2.engine.donate, bool)
+    assert tr2.engine.with_metrics is False
+
+
 def test_pow2_chunking():
     assert _pow2_chunks(13, 8) == [8, 4, 1]
     assert _pow2_chunks(32, 32) == [32]

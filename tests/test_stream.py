@@ -1,0 +1,305 @@
+"""Streaming participation subsystem: event queue, capacity slots,
+scheduler/trainer parity, scenario library.
+
+The acceptance-critical property pinned here: a client constructed
+*after* the RoundEngine was built can be admitted mid-training via an
+Arrival event and contributes to aggregation without an engine rebuild or
+a scan recompile (compilation cache entries are counted across the
+admit).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper import SYNTHETIC_LR
+from repro.core.participation import TRACES
+from repro.data import synthetic_federation
+from repro.fed import (Arrival, Client, Departure, FederatedTrainer,
+                       InactivityBurst, StreamScheduler, TraceShift)
+from repro.fed.scenarios import (SCENARIOS, make_scenario, run_scenario,
+                                 summarize_history)
+from repro.models.small import init_small, logits_small, make_loss_fn
+
+CFG = SYNTHETIC_LR
+
+
+def eval_fn(params, x, y):
+    lg = logits_small(params, CFG, x)
+    ll = jax.nn.log_softmax(lg)
+    loss = -jnp.mean(jnp.take_along_axis(
+        ll, y[:, None].astype(jnp.int32), axis=1))
+    acc = jnp.mean((jnp.argmax(lg, -1) == y).astype(jnp.float32))
+    return float(loss), float(acc)
+
+
+def make_clients(n=8, seed=0, trace_idx=None):
+    train, test = synthetic_federation(0.5, 0.5, n, seed=seed)
+    rng = np.random.default_rng(seed)
+    return [Client(x=tr[0], y=tr[1],
+                   trace=TRACES[trace_idx if trace_idx is not None
+                                else rng.integers(0, 8)],
+                   x_test=te[0], y_test=te[1])
+            for tr, te in zip(train, test)]
+
+
+def make_scheduler(clients, *, capacity=None, mode="device", seed=0,
+                   chunk_size=4, events=(), **kw):
+    return StreamScheduler(
+        clients=clients, init_params=init_small(jax.random.PRNGKey(0), CFG),
+        loss_fn=make_loss_fn(CFG), eval_fn=eval_fn, capacity=capacity,
+        local_epochs=5, batch_size=6, scheme="C", eta0=1.0, seed=seed,
+        mode=mode, chunk_size=chunk_size, events=events, **kw)
+
+
+def assert_params_close(p1, p2, rtol=3e-4, atol=1e-5):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=rtol, atol=atol)
+
+
+# -- scheduler vs trainer parity (satellite) ----------------------------------
+
+def test_scheduler_replays_static_schedule_like_trainer():
+    """A precomputed schedule (arrival at tau=3, departure at tau=6)
+    replayed through a *standalone* StreamScheduler — the arriving client
+    admitted into a capacity slot via an Arrival event — reproduces the
+    FederatedTrainer engine-mode history round-for-round: identical
+    RoundRecord.s / eta / event streams and allclose params."""
+    all_clients = make_clients(8, seed=0)
+    tr_clients = make_clients(8, seed=0)
+    tr_clients[7].active_from = 3
+    tr_clients[2].departs_at = 6
+    tr = FederatedTrainer(
+        loss_fn=make_loss_fn(CFG), eval_fn=eval_fn,
+        init_params=init_small(jax.random.PRNGKey(0), CFG),
+        clients=tr_clients, local_epochs=5, batch_size=6, scheme="C",
+        eta0=1.0, seed=0, engine="plan", chunk_size=4)
+    h1 = tr.run(10, eval_every=4)
+
+    sch = make_scheduler(
+        all_clients[:7], capacity=8, mode="plan", seed=0,
+        max_samples=max(c.n for c in all_clients),
+        events=[Arrival(3, client=all_clients[7]),
+                Departure(6, client_id=2)])
+    h2 = sch.run(10, eval_every=4)
+
+    assert len(h1) == len(h2) == 10
+    for r1, r2 in zip(h1, h2):
+        assert r1.tau == r2.tau
+        np.testing.assert_array_equal(r1.s, r2.s)   # identical RNG stream
+        np.testing.assert_allclose(r1.eta, r2.eta, rtol=1e-6)
+        assert r1.event == r2.event
+        assert r1.n_active == r2.n_active
+        assert np.isnan(r1.loss) == np.isnan(r2.loss)
+        if np.isfinite(r1.loss):
+            np.testing.assert_allclose(r1.loss, r2.loss, rtol=1e-4,
+                                       atol=1e-5)
+    assert_params_close(tr.params, sch.params)
+    assert tr.objective == sch.objective
+
+
+# -- capacity slots (acceptance criterion) ------------------------------------
+
+def test_arrival_after_build_no_rebuild_no_recompile():
+    """A client constructed after RoundEngine build is admitted
+    mid-training and contributes to aggregation; the compiled span scans
+    are reused (per-chunk compilation cache entries unchanged across the
+    admit) and the engine object is never rebuilt."""
+    sch = make_scheduler(make_clients(4, seed=5), capacity=6,
+                         max_samples=600, mode="device", chunk_size=4)
+    engine = sch.engine
+    sch.run(4, eval_every=4)
+    fns = dict(engine._fns)
+    assert fns, "expected compiled chunk fns after the first run"
+    sizes = {k: f._cache_size() for k, f in fns.items()}
+
+    # brand-new device: data and trace did not exist at build time
+    new_cl = make_clients(1, seed=77, trace_idx=0)[0]  # cpu_0: s=E surely
+    sch.push(Arrival(4, client=new_cl))
+    sch.run(4, eval_every=4)
+
+    assert sch.engine is engine                      # no rebuild
+    for k, f in fns.items():                         # no recompile
+        assert f._cache_size() == sizes[k], f"chunk {k} recompiled"
+    assert set(engine._fns) == set(fns), "new scan lengths compiled"
+
+    slot = sch.slot_of[4]
+    assert slot == 4
+    # the new client participates (cpu_0 trace: all E epochs, every round)
+    post = [h for h in sch.history if h.tau >= 4]
+    assert all(h.s[slot] == 5.0 for h in post)
+    # and carries aggregation weight
+    assert sch.data_weights()[slot] > 0
+    assert any("arrival:4;" in h.event for h in post)
+
+
+def test_capacity_exhausted_raises():
+    sch = make_scheduler(make_clients(2, seed=1), capacity=2,
+                         max_samples=600)
+    sch.push(Arrival(1, client=make_clients(1, seed=9)[0]))
+    with pytest.raises(RuntimeError, match="capacity"):
+        sch.run(4, eval_every=4)
+
+
+def test_departure_frees_slot_for_reuse():
+    """Exclude-departure evicts the slot; a later Arrival reuses it."""
+    sch = make_scheduler(make_clients(3, seed=2), capacity=3,
+                         max_samples=600,
+                         events=[Departure(2, client_id=0,
+                                           policy="exclude")])
+    new_cl = make_clients(1, seed=33, trace_idx=0)[0]
+    sch.push(Arrival(4, client=new_cl))
+    sch.run(8, eval_every=8)
+    assert 0 not in sch.objective and 3 in sch.objective
+    assert sch.slot_of[3] == 0                       # slot 0 recycled
+    assert int(np.asarray(sch.engine.n)[0]) == new_cl.n
+    for h in sch.history:
+        if h.tau in (0, 1):
+            pass                                     # old client may train
+        elif 2 <= h.tau < 4:
+            assert h.s[0] == 0.0                     # slot empty
+        else:
+            assert h.s[0] == 5.0                     # new client, cpu_0
+
+
+# -- event semantics ----------------------------------------------------------
+
+def test_trace_shift_changes_sampling_law():
+    sch = make_scheduler(make_clients(3, seed=3, trace_idx=4),
+                         events=[TraceShift(3, 0, TRACES[0])])
+    sch.run(8, eval_every=8)
+    post = [h.s[0] for h in sch.history if h.tau >= 3]
+    assert all(s == 5.0 for s in post)               # cpu_0: s = E surely
+    pre = [h.s[0] for h in sch.history if h.tau < 3]
+    assert np.mean(pre) < 4.0                        # cpu_90: mean 0.3*E
+
+
+def test_inactivity_burst_masks_and_resumes():
+    sch = make_scheduler(make_clients(4, seed=4, trace_idx=0),
+                         events=[InactivityBurst(2, 2, (0, 1))])
+    sch.run(6, eval_every=6)
+    for h in sch.history:
+        masked = 2 <= h.tau < 4
+        assert (h.s[0] == 0.0) == masked
+        assert (h.s[1] == 0.0) == masked
+        assert h.s[2] == 5.0 and h.s[3] == 5.0       # cohort-local outage
+    assert any("burst:0,1@2;" in h.event for h in sch.history)
+
+
+def test_events_applied_in_tau_order_and_coalesced():
+    """Out-of-order pushes fire in tau order; same-tau events coalesce
+    into a single span boundary."""
+    clients = make_clients(4, seed=6, trace_idx=0)
+    sch = make_scheduler(clients, capacity=5, max_samples=600)
+    sch.push(Departure(5, client_id=1))              # pushed first...
+    sch.push(TraceShift(2, 0, TRACES[4]))            # ...fires earlier
+    sch.push(InactivityBurst(2, 1, (3,)))            # same tau: coalesced
+    sch.run(8, eval_every=8)
+    ev = {h.tau: h.event for h in sch.history if h.event}
+    assert set(ev) == {2, 5}
+    assert ev[2] == "trace-shift:0;burst:3@1;"
+    assert ev[5] == "departure-exclude:1;"
+
+
+def test_include_departed_client_can_rejoin():
+    """Regression (review finding): an include-policy departure keeps the
+    client in the objective, so the duplicate-arrival guard used to
+    swallow its re-arrival and the device stayed dark forever.  A rejoin
+    must resume participation (slot re-admitted, s > 0) without an LR
+    restart — the objective never shifted."""
+    sch = make_scheduler(make_clients(3, seed=8, trace_idx=0),
+                         events=[Departure(2, client_id=0,
+                                           policy="include"),
+                                 Arrival(4, client_id=0)])
+    sch.run(8, eval_every=8)
+    assert 0 in sch.objective and 0 not in sch.departed
+    assert 0 in sch.slot_of                          # slot re-admitted
+    assert sch.lr_shift_tau == 0                     # no objective shift
+    for h in sch.history:
+        expect = 0.0 if 2 <= h.tau < 4 else 5.0      # cpu_0: s = E surely
+        assert h.s[sch.slot_of[0]] == expect, h.tau
+    assert any("rejoin:0;" in h.event for h in sch.history if h.tau == 4)
+
+
+def test_scheme_a_not_inflated_by_capacity_padding():
+    """Regression (review finding): Scheme A's N must count devices in
+    the objective (p > 0), not engine capacity columns."""
+    from repro.core.aggregation import scheme_coefficients
+    p = jnp.asarray([0.5, 0.5, 0.0, 0.0])           # 2 devices, 2 empty
+    s = jnp.asarray([5.0, 5.0, 0.0, 0.0])
+    c = np.asarray(scheme_coefficients("A", p, s, 5))
+    np.testing.assert_allclose(c, [0.5, 0.5, 0.0, 0.0])  # N=2, K=2
+
+
+def test_late_event_fires_at_next_boundary():
+    """An event whose tau is already in the past (late-arriving news)
+    applies at the next span boundary instead of being lost."""
+    sch = make_scheduler(make_clients(3, seed=7, trace_idx=0))
+    sch.run(4, eval_every=4)
+    sch.push(Departure(1, client_id=2))              # tau=1 already passed
+    sch.run(4, eval_every=4)
+    assert 2 not in sch.objective
+    assert any("departure-exclude:2;" in h.event
+               for h in sch.history if h.tau == 4)
+
+
+# -- honest records under streaming (satellite) -------------------------------
+
+def test_churn_scenario_honest_nan_records():
+    """With eval_every=5, only eval rounds and event rounds carry finite
+    loss/acc; everything else is NaN, and history consumers
+    (summarize_history, paper_tables-style mean) must filter."""
+    sc = make_scenario("churn", n_clients=6, n_rounds=15, seed=1)
+    sch, summary = run_scenario(sc, eval_every=5)
+    assert len(sch.history) == 15
+    for h in sch.history:
+        should_eval = h.tau % 5 == 0 or bool(h.event)
+        assert np.isfinite(h.loss) == should_eval
+        assert np.isfinite(h.acc) == should_eval
+    finite = [h for h in sch.history if np.isfinite(h.loss)]
+    assert 0 < len(finite) < len(sch.history)
+    assert summary["evals"] == len(finite)
+    assert np.isfinite(summary["final_loss"])
+    # benchmarks/paper_tables._run-style aggregation over filtered accs
+    accs = [h.acc for h in sch.history if np.isfinite(h.acc)]
+    assert np.isfinite(np.mean(accs[-3:]))
+
+
+# -- scenario library ---------------------------------------------------------
+
+def test_scenarios_reproducible_from_seed():
+    for name in SCENARIOS:
+        a = make_scenario(name, seed=3)
+        b = make_scenario(name, seed=3)
+        assert a.signature() == b.signature()
+        assert len(a.clients) == len(b.clients)
+        for ca, cb in zip(a.clients, b.clients):
+            np.testing.assert_array_equal(ca.x, cb.x)
+            assert ca.trace == cb.trace
+        c = make_scenario(name, seed=4)
+        assert a.signature() != c.signature() or any(
+            not np.array_equal(ca.x, cc.x)
+            for ca, cc in zip(a.clients, c.clients))
+
+
+def test_scenario_smoke_via_benchmarks_run():
+    """The --scenario smoke flag's implementation: a tiny scenario runs
+    end-to-end through benchmarks/run.py without the full benchmark."""
+    from benchmarks.run import scenario_smoke
+    summary = scenario_smoke("staggered", rounds=8)
+    assert summary["rounds"] == 8
+    assert summary["events_applied"] >= 1            # cohort 1 arrived
+    assert summary["scenario"] == "staggered"
+    assert np.isfinite(summary["final_loss"])
+
+
+def test_fed_stream_cli(tmp_path):
+    from repro.launch.fed_stream import main as cli_main
+    out = tmp_path / "stream.json"
+    summary = cli_main(["--scenario", "diurnal", "--rounds", "6",
+                        "--eval-every", "3", "--quiet",
+                        "--json", str(out)])
+    assert out.exists()
+    assert summary["rounds"] == 6
+    assert summary["rounds_per_sec"] > 0
