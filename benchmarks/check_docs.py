@@ -1,0 +1,114 @@
+"""Execute the fenced Python snippets in README.md and docs/*.md.
+
+Documentation rots silently: an API rename leaves every prose example
+behind, and nobody notices until a reader pastes one.  This checker makes
+the docs executable — every fenced block tagged ``python`` is run, in
+file order, inside one shared namespace per file (so a later snippet may
+use an earlier snippet's imports, the way a reader would paste them).
+
+Blocks that cannot run on a 1-device CI container (multi-device meshes,
+TPU-only paths) or that are deliberately illustrative are tagged
+``python no-run`` and are counted but skipped.  Plain ```` ``` ```` blocks
+(shell transcripts, ascii diagrams) are ignored entirely.
+
+  PYTHONPATH=src python -m benchmarks.check_docs          # whole doc set
+  PYTHONPATH=src python -m benchmarks.run --check-docs    # same, CI gate
+  PYTHONPATH=src python -m benchmarks.check_docs docs/scaling.md
+
+Exit status is nonzero on the first failing snippet, with its file and
+line range in the report.
+"""
+from __future__ import annotations
+
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+_FENCE = re.compile(r"^```(.*)$")
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_DOCS = ("README.md", "docs")
+
+
+def extract_blocks(path: Path):
+    """Yield (start_line, info_words, code) for every fenced block."""
+    lines = path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if not m:
+            i += 1
+            continue
+        info = m.group(1).strip().split()
+        start = i + 1
+        body = []
+        i += 1
+        while i < len(lines) and not _FENCE.match(lines[i]):
+            body.append(lines[i])
+            i += 1
+        i += 1                               # closing fence
+        yield start + 1, info, "\n".join(body)
+
+
+def doc_files(targets=None):
+    if targets:
+        return [Path(t) for t in targets]
+    out = []
+    for t in DEFAULT_DOCS:
+        p = ROOT / t
+        if p.is_dir():
+            out.extend(sorted(p.glob("*.md")))
+        elif p.exists():
+            out.append(p)
+    return out
+
+
+def run_file(path: Path, *, verbose: bool = True):
+    """Execute the runnable python blocks of one file; returns
+    (ran, skipped, error) — error is a (lineno, traceback) tuple."""
+    ns = {"__name__": f"__docsnippet_{path.stem}__"}
+    ran = skipped = 0
+    for lineno, info, code in extract_blocks(path):
+        if not info or info[0] != "python":
+            continue
+        if "no-run" in info:
+            skipped += 1
+            continue
+        t0 = time.perf_counter()
+        try:
+            exec(compile(code, f"{path}:{lineno}", "exec"), ns)
+        except Exception:
+            return ran, skipped, (lineno, traceback.format_exc())
+        ran += 1
+        if verbose:
+            rel = path.relative_to(ROOT) if path.is_absolute() else path
+            print(f"  ok {rel}:{lineno} "
+                  f"({time.perf_counter() - t0:.2f}s)")
+    return ran, skipped, None
+
+
+def main(argv=None) -> int:
+    targets = list(argv) if argv else None
+    total_ran = total_skipped = 0
+    for path in doc_files(targets):
+        if not path.exists():
+            print(f"MISSING {path}")
+            return 1
+        ran, skipped, err = run_file(path)
+        total_ran += ran
+        total_skipped += skipped
+        if err is not None:
+            lineno, tb = err
+            print(f"FAIL {path}:{lineno}\n{tb}")
+            return 1
+    print(f"# check-docs: {total_ran} snippets executed, "
+          f"{total_skipped} tagged no-run")
+    if total_ran == 0:
+        print("FAIL: no runnable snippets found — fence tags broken?")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

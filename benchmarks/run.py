@@ -34,6 +34,11 @@ def main() -> None:
                     help="skip the rounds/sec engine benchmark")
     ap.add_argument("--skip-stream", action="store_true",
                     help="skip the streaming-participation benchmark")
+    ap.add_argument("--skip-sharded", action="store_true",
+                    help="skip the sharded-vs-single engine benchmark")
+    ap.add_argument("--check-docs", action="store_true",
+                    help="execute the fenced python snippets in README.md "
+                         "and docs/*.md, then exit (CI docs-rot gate)")
     ap.add_argument("--bench-json", default="BENCH_engine.json",
                     help="where to write the machine-readable engine "
                          "benchmark (default: BENCH_engine.json)")
@@ -44,6 +49,10 @@ def main() -> None:
                     help="smoke mode: run only a tiny named streaming "
                          "scenario end-to-end and exit (no benchmarks)")
     args = ap.parse_args()
+
+    if args.check_docs:
+        from benchmarks.check_docs import main as check_docs_main
+        sys.exit(check_docs_main())
 
     if args.scenario is not None:
         summary = scenario_smoke(args.scenario)
@@ -72,6 +81,18 @@ def main() -> None:
         print(f"weighted_agg_single_launch_us,"
               f"{res['weighted_agg_single_launch_us']}")
         print(f"# wrote {args.bench_json}")
+        sys.stdout.flush()
+
+    if not args.skip_sharded:
+        from benchmarks.sharded_bench import main as sharded_main
+        res = sharded_main(args.bench_json)
+        print("\n# sharded engine: mode,rounds_per_sec")
+        for mode, rps in res["rounds_per_sec"].items():
+            print(f"{mode},{rps}")
+        print(f"speedup_sharded_vs_single,"
+              f"{res['speedup_sharded_vs_single']}")
+        print(f"admit_us_sharded,{res['admit_us_sharded']}")
+        print(f"# merged into {args.bench_json}")
         sys.stdout.flush()
 
     if not args.skip_stream:

@@ -1,0 +1,189 @@
+"""Sharded-vs-single rounds/sec: the federation axis over a device mesh.
+
+Runs the device-mode RoundEngine twice in the same process — once
+unsharded (all slots on one device) and once with the client axis sharded
+over a 1-D 'data' mesh — and records best-of-k rounds/sec for each, plus
+the admit() slot-write cost under sharding.  Results merge into
+BENCH_engine.json under the ``"sharded"`` key (and the headline series
+``rounds_per_sec.engine_sharded_{n}dev``) so the perf trajectory stays in
+one machine-readable file.
+
+Multi-device CPU needs ``XLA_FLAGS=--xla_force_host_platform_device_count``
+set before jax initializes; when the calling process has a single device,
+``main()`` transparently re-executes this module in a subprocess with a
+4-virtual-device CPU mesh and merges the child's JSON.  On real TPU/GPU
+fleets the in-process path runs directly over the local devices.
+
+  PYTHONPATH=src python -m benchmarks.sharded_bench          # writes json
+  PYTHONPATH=src python -m benchmarks.sharded_bench --emit   # raw JSON only
+
+On this CPU container the sharded numbers are a *correctness* series, not
+a speed win — 4 virtual devices share the same cores and the per-round
+all-reduce is pure overhead at logreg size.  The series exists to keep the
+cross-device path benchmarked so real-mesh runs have a trajectory to
+extend.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+N_SHARDS = 4
+
+
+def _make_engine(sharding, *, n_clients, chunk, seed=0):
+    import jax
+    import numpy as np
+
+    from repro.configs.paper import SYNTHETIC_LR
+    from repro.core.participation import TRACES
+    from repro.data import synthetic_federation
+    from repro.fed import Client, RoundEngine
+    from repro.models.small import init_small, make_loss_fn
+
+    train, _ = synthetic_federation(0.5, 0.5, n_clients, seed=seed)
+    rng = np.random.default_rng(seed)
+    clients = [Client(x=tr[0], y=tr[1], trace=TRACES[rng.integers(0, 5)])
+               for tr in train]
+    eng = RoundEngine(loss_fn=make_loss_fn(SYNTHETIC_LR), clients=clients,
+                      local_epochs=5, batch_size=20, scheme="C", eta0=0.5,
+                      chunk_size=chunk, agg="auto", sharding=sharding)
+    params = init_small(jax.random.PRNGKey(0), SYNTHETIC_LR)
+    C, cap = len(clients), eng.capacity
+    p = np.zeros(cap)
+    p[:C] = np.array([c.n for c in clients]) / sum(c.n for c in clients)
+    active = np.zeros(cap, np.float32)
+    active[:C] = 1.0
+    kwargs = dict(p=p, active=active, lr_shift_tau=0,
+                  reboot_tau0=np.zeros(cap, np.int32),
+                  reboot_boost=np.ones(cap, np.float32))
+    return eng, params, kwargs
+
+
+def _rps(eng, params, kwargs, *, span, reps):
+    import jax
+
+    key = jax.random.PRNGKey(1)
+    params, _ = eng.run_span(params, 0, 2 * span, key=key, **kwargs)
+    best = float("inf")
+    tau = 2 * span
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        params, _ = eng.run_span(params, tau, span, key=key, **kwargs)
+        jax.block_until_ready(params)
+        best = min(best, time.perf_counter() - t0)
+        tau += span
+    return span / best
+
+
+def _admit_us(eng, reps=30):
+    import jax
+
+    from repro.core.participation import TRACES
+    from repro.data import synthetic_federation
+    from repro.fed import Client
+
+    train, _ = synthetic_federation(0.5, 0.5, 1, seed=77)
+    cl = Client(x=train[0][0], y=train[0][1], trace=TRACES[0])
+    slot = eng.capacity - 1
+    eng.admit(slot, cl)                      # warm the slot-write jits
+    jax.block_until_ready(eng.s_cdf)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        eng.admit(slot, cl)
+    jax.block_until_ready(eng.s_cdf)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(*, n_clients=32, span=32, reps=5, chunk=32):
+    """In-process sharded-vs-single series; needs >= N_SHARDS devices."""
+    import jax
+
+    from repro.fed import make_fed_sharding
+
+    n_dev = len(jax.devices())
+    if n_dev < N_SHARDS:
+        raise RuntimeError(f"need {N_SHARDS} devices, have {n_dev}; "
+                           f"run via main() for the subprocess path")
+    fs = make_fed_sharding(N_SHARDS)
+    single = _make_engine(None, n_clients=n_clients, chunk=chunk)
+    sharded = _make_engine(fs, n_clients=n_clients, chunk=chunk)
+    rps_single = _rps(*single, span=span, reps=reps)
+    rps_sharded = _rps(*sharded, span=span, reps=reps)
+    return {
+        "config": {"n_clients": n_clients, "local_epochs": 5,
+                   "batch_size": 20, "span": span, "reps": reps,
+                   "chunk_size": chunk, "n_shards": N_SHARDS,
+                   "backend": jax.default_backend(),
+                   "slots_per_shard": sharded[0].capacity // N_SHARDS},
+        "rounds_per_sec": {
+            "single_device": round(rps_single, 2),
+            f"sharded_{N_SHARDS}dev": round(rps_sharded, 2),
+        },
+        "speedup_sharded_vs_single": round(rps_sharded / rps_single, 3),
+        "admit_us_sharded": round(_admit_us(sharded[0]), 1),
+    }
+
+
+def _run_or_respawn(**kw):
+    import jax
+
+    if len(jax.devices()) >= N_SHARDS:
+        return run(**kw)
+    # single-device parent (the usual CPU CI case): re-exec under a
+    # virtual 4-device mesh — XLA_FLAGS must precede jax initialization;
+    # the caller's config rides along as JSON
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count="
+                        f"{N_SHARDS}").strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")])
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sharded_bench", "--emit",
+         "--kw", json.dumps(kw)],
+        env=env, cwd=root, capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded bench subprocess failed:\n"
+                           f"{proc.stdout}\n{proc.stderr}")
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+def main(path="BENCH_engine.json", **kw):
+    """Merge the sharded series into BENCH_engine.json under the
+    "sharded" key.  The matched sharded-vs-single pair lives only there
+    (its own config block): the top-level rounds_per_sec series is
+    measured at a different config and through the trainer, so the two
+    are not comparable side by side."""
+    res = _run_or_respawn(**kw)
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data["sharded"] = res
+    data.get("rounds_per_sec", {}).pop(
+        f"engine_sharded_{N_SHARDS}dev", None)   # drop a stale pre-fix key
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+    return res
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--emit", action="store_true",
+                    help="run in-process and print raw JSON (subprocess "
+                         "mode; expects the device count already set)")
+    ap.add_argument("--kw", default="{}",
+                    help="JSON dict of run() kwargs (subprocess mode)")
+    ap.add_argument("--json", default="BENCH_engine.json")
+    args = ap.parse_args()
+    if args.emit:
+        print(json.dumps(run(**json.loads(args.kw))))
+    else:
+        print(json.dumps(main(args.json), indent=2))

@@ -1,0 +1,3 @@
+"""Reproduction of "Towards Flexible Device Participation in Federated
+Learning" grown into a device-resident, streaming, mesh-sharded federated
+training system on jax + Pallas.  See the root README.md for the map."""

@@ -70,18 +70,29 @@ def flatten_client_deltas(deltas):
 
 
 def aggregate_deltas_flat(params, deltas, coeffs, *, block: int = 2048,
-                          interpret=None):
+                          interpret=None, sharding=None):
     """Same contract as aggregate_deltas, but the whole model is flattened
     into a single (C, D_total) buffer and reduced with ONE weighted_agg
-    Pallas launch (instead of one scaled-add tree per leaf)."""
+    Pallas launch (instead of one scaled-add tree per leaf).
+
+    sharding: an optional fed.sharding.FedSharding whose mesh shards the
+    client axis — each device then reduces its own (C/n, D_total) slab
+    locally and a psum epilogue replicates the result (the cross-device
+    path of the sharded round engine)."""
     from repro.kernels import ops  # kernels never import core: no cycle
 
     flat = flatten_client_deltas(deltas)
     # shrink the tile for models smaller than one default block (pad waste)
     D = flat.shape[1]
     block = min(block, max(128, -(-D // 128) * 128))
-    agg = ops.weighted_agg(coeffs.astype(jnp.float32), flat, block=block,
-                           interpret=interpret)
+    if sharding is not None:
+        flat = sharding.constrain_client(flat)
+        agg = ops.weighted_agg_sharded(
+            coeffs.astype(jnp.float32), flat, mesh=sharding.mesh,
+            axis=sharding.axis, block=block, interpret=interpret)
+    else:
+        agg = ops.weighted_agg(coeffs.astype(jnp.float32), flat,
+                               block=block, interpret=interpret)
     p_leaves, treedef = jax.tree.flatten(params)
     outs, off = [], 0
     for p in p_leaves:

@@ -50,21 +50,32 @@ def local_sgd(loss_fn: Callable, params, client_batches, alpha_e, eta):
 
 def fed_round_parallel(loss_fn, params, batches, alpha, coeffs, eta, *,
                        agg: str = "tree", interpret=None,
-                       with_metrics: bool = True):
+                       with_metrics: bool = True, sharding=None):
     """batches: pytree (C, E, ...); alpha: (C, E); coeffs: (C,).
     Returns (new_params, metrics).
 
     agg selects the aggregation layout: "tree" is the per-leaf jnp
     reference; "flat" flattens the delta pytree into one (C, D_total)
     buffer and reduces it with a single weighted_agg Pallas launch.
-    with_metrics=False skips the delta-norm reduction (hot-loop mode)."""
+    with_metrics=False skips the delta-norm reduction (hot-loop mode).
+
+    sharding: optional fed.sharding.FedSharding — the client axis of
+    batches/alpha/deltas is constrained to the mesh's federation axis so
+    local epochs run device-parallel, and the aggregated params come back
+    replicated (via GSPMD all-reduce for "tree", an explicit shard_map
+    psum epilogue for "flat")."""
     deltas = jax.vmap(lambda b, a: local_sgd(loss_fn, params, b, a, eta))(
         batches, alpha)
+    if sharding is not None:
+        deltas = sharding.constrain_client_tree(deltas)
     if agg == "flat":
         new_params = aggregate_deltas_flat(params, deltas, coeffs,
-                                           interpret=interpret)
+                                           interpret=interpret,
+                                           sharding=sharding)
     else:
         new_params = aggregate_deltas(params, deltas, coeffs)
+    if sharding is not None:
+        new_params = sharding.constrain_replicated(new_params)
     if not with_metrics:
         return new_params, {"delta_norm": jnp.float32(0)}
     dn = jnp.sqrt(sum(jnp.sum(jnp.square(x))

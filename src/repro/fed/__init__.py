@@ -1,9 +1,11 @@
 from repro.fed.driver import Client, FederatedTrainer, RoundRecord
 from repro.fed.engine import RoundEngine
+from repro.fed.sharding import FedSharding, make_fed_sharding
 from repro.fed.stream import (Arrival, Departure, InactivityBurst,
                               ParticipationEvent, StreamScheduler,
                               TraceShift)
 
 __all__ = ["Client", "FederatedTrainer", "RoundRecord", "RoundEngine",
            "Arrival", "Departure", "InactivityBurst", "ParticipationEvent",
-           "StreamScheduler", "TraceShift"]
+           "StreamScheduler", "TraceShift", "FedSharding",
+           "make_fed_sharding"]

@@ -79,7 +79,7 @@ class FederatedTrainer:
                  seed: int = 0, engine: Optional[str] = "plan",
                  chunk_size: int = 16, agg: str = "auto",
                  interpret=None, donate: Optional[bool] = None,
-                 with_metrics: bool = False):
+                 with_metrics: bool = False, sharding=None):
         self.loss_fn = loss_fn
         self.eval_fn = eval_fn  # eval_fn(params, x, y) -> (loss, acc)
         self.params = init_params
@@ -106,6 +106,7 @@ class FederatedTrainer:
         self.interpret = interpret
         self.donate = donate
         self.with_metrics = with_metrics
+        self.sharding = sharding
         self._engine: Optional[RoundEngine] = None
         self._scheduler = None
         self._key = jax.random.PRNGKey(seed)
@@ -125,7 +126,7 @@ class FederatedTrainer:
                 local_epochs=self.E, batch_size=self.B, scheme=self.scheme,
                 eta0=self.eta0, chunk_size=self.chunk_size, agg=self.agg,
                 interpret=self.interpret, donate=self.donate,
-                with_metrics=self.with_metrics)
+                with_metrics=self.with_metrics, sharding=self.sharding)
         return self._engine
 
     # -- weights over the current objective set -----------------------------

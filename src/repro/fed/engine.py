@@ -23,10 +23,25 @@ chunked ``lax.scan``:
   * aggregation uses the pytree-flat path: the delta pytree is flattened
     to one (C, D_total) buffer and reduced with a single weighted_agg
     Pallas launch per round (``agg="flat"``), or the per-leaf jnp tree
-    path (``agg="tree"``).
+    path (``agg="tree"``);
+  * with ``sharding=FedSharding(...)`` the client/slot axis of every
+    buffer is sharded over the mesh's federation axis: local epochs run
+    device-parallel and the delta reduction ends in a cross-device
+    all-reduce that leaves params replicated (see fed/sharding.py and
+    docs/scaling.md).
 
-The host loop above the engine (FederatedTrainer) only handles
-arrival/departure events and evaluation at chunk boundaries.
+The host loop above the engine (StreamScheduler in fed/stream.py — with
+FederatedTrainer as a thin adapter over it) handles participation events,
+span splitting and evaluation at span boundaries.
+
+Usage::
+
+    eng = RoundEngine(loss_fn=loss_fn, clients=clients, local_epochs=5,
+                      batch_size=10, capacity=16)
+    params, metrics = eng.run_span(params, tau_start=0, n_rounds=32,
+                                   p=p, active=active, lr_shift_tau=0,
+                                   reboot_tau0=rb0, reboot_boost=rbb,
+                                   key=jax.random.PRNGKey(0))
 """
 from __future__ import annotations
 
@@ -152,6 +167,15 @@ class RoundEngine:
     dynamic-update-slice each — buffer shapes never change, so the
     compiled span scans are reused across arbitrarily many membership
     events (no rebuild, no recompile).
+
+    Sharding: with ``sharding=FedSharding(mesh)`` the slot axis of every
+    client buffer is sharded over the mesh's federation ('data') axis
+    (capacity is padded so each shard owns whole slots), local epochs run
+    in parallel across devices and aggregation all-reduces to replicated
+    params.  Slot writes stay one replicated-row device_put plus the same
+    dynamic-update-slice, which XLA lowers to a masked shard-local write —
+    so the zero-recompile membership-churn contract is preserved
+    unchanged under sharding.
     """
 
     def __init__(self, *, loss_fn, clients, local_epochs: int,
@@ -160,7 +184,8 @@ class RoundEngine:
                  interpret=None, donate: Optional[bool] = None,
                  with_metrics: bool = False,
                  capacity: Optional[int] = None,
-                 max_samples: Optional[int] = None):
+                 max_samples: Optional[int] = None,
+                 sharding=None):
         self.loss_fn = loss_fn
         self.E = local_epochs
         self.B = batch_size
@@ -178,6 +203,7 @@ class RoundEngine:
             donate = jax.default_backend() != "cpu"
         self.donate = donate
 
+        self.sharding = sharding
         C = len(clients)
         if C == 0:
             raise ValueError("RoundEngine needs at least one founding "
@@ -186,6 +212,10 @@ class RoundEngine:
             capacity = C
         if capacity < C:
             raise ValueError(f"capacity {capacity} < {C} founding clients")
+        if sharding is not None:
+            # every shard owns the same number of whole slots; the extra
+            # columns are ordinary empty capacity slots (p=0, never train)
+            capacity = sharding.pad_capacity(capacity)
         self.capacity = capacity
         ns = [c.n for c in clients]
         nmax = max(ns)
@@ -205,11 +235,19 @@ class RoundEngine:
             Y[i, :c.n] = c.y
             n_arr[i] = c.n
         cdf[:C] = trace_s_cdf(clients, self.E)
-        # datasets move host->device exactly once, here
-        self.data_x = jax.device_put(X)
-        self.data_y = jax.device_put(Y)
-        self.n = jax.device_put(n_arr)
-        self.s_cdf = jax.device_put(cdf)
+        # datasets move host->device exactly once, here; under sharding
+        # each device receives only the slot rows it owns, and single
+        # rows written later (admit/set_trace) go up replicated
+        if sharding is not None:
+            self._put_slots = sharding.put_client
+            self._put_row = lambda a: jax.device_put(
+                a, sharding.replicated())
+        else:
+            self._put_slots = self._put_row = jax.device_put
+        self.data_x = self._put_slots(X)
+        self.data_y = self._put_slots(Y)
+        self.n = self._put_slots(n_arr)
+        self.s_cdf = self._put_slots(cdf)
         self._fns = {}
 
     # -- capacity-slot lifecycle ----------------------------------------------
@@ -234,11 +272,11 @@ class RoundEngine:
         xrow[:client.n] = x
         yrow[:client.n] = client.y
         s = jnp.int32(slot)
-        self.data_x = _slot_write(self.data_x, jax.device_put(xrow), s)
-        self.data_y = _slot_write(self.data_y, jax.device_put(yrow), s)
+        self.data_x = _slot_write(self.data_x, self._put_row(xrow), s)
+        self.data_y = _slot_write(self.data_y, self._put_row(yrow), s)
         self.n = _slot_write(self.n, jnp.int32(client.n), s)
         self.s_cdf = _slot_write(
-            self.s_cdf, jax.device_put(trace_cdf_row(client.trace, self.E)),
+            self.s_cdf, self._put_row(trace_cdf_row(client.trace, self.E)),
             s)
 
     def evict(self, slot: int) -> None:
@@ -251,14 +289,14 @@ class RoundEngine:
         s = jnp.int32(slot)
         self.n = _slot_write(self.n, jnp.int32(1), s)
         self.s_cdf = _slot_write(
-            self.s_cdf, jax.device_put(empty_slot_cdf(self.E)), s)
+            self.s_cdf, self._put_row(empty_slot_cdf(self.E)), s)
 
     def set_trace(self, slot: int, trace) -> None:
         """Swap the availability law of an occupied slot (TraceShift)."""
         if not 0 <= slot < self.capacity:
             raise IndexError(f"slot {slot} out of range [0, {self.capacity})")
         self.s_cdf = _slot_write(
-            self.s_cdf, jax.device_put(trace_cdf_row(trace, self.E)),
+            self.s_cdf, self._put_row(trace_cdf_row(trace, self.E)),
             jnp.int32(slot))
 
     # -- jitted chunk builders ------------------------------------------------
@@ -277,7 +315,7 @@ class RoundEngine:
         new_params, m = fed_round_parallel(
             self.loss_fn, params, batches, alpha, coeffs, eta,
             agg=self.agg, interpret=self.interpret,
-            with_metrics=self.with_metrics)
+            with_metrics=self.with_metrics, sharding=self.sharding)
         return new_params, {"s": s, "eta": eta,
                             "delta_norm": m["delta_norm"]}
 
@@ -291,6 +329,10 @@ class RoundEngine:
                       p, rb_tau0, rb_boost, lr_shift):
                 alphas, idxs = device_sample_span(
                     key, R, active, n, s_cdf, self.E, self.B)
+                if self.sharding is not None:
+                    # keep the per-span draws sharded on the client dim
+                    alphas = self.sharding.constrain_client(alphas, 1)
+                    idxs = self.sharding.constrain_client(idxs, 1)
 
                 def body(w, xs):
                     alpha, idx, tau = xs
@@ -340,6 +382,16 @@ class RoundEngine:
         if plan is not None:
             alphas = jnp.asarray(plan[0], jnp.float32)
             idxs = jnp.asarray(plan[1], jnp.int32)
+        if self.sharding is not None:
+            # span args are per-slot columns -> shard with the buffers;
+            # params enter (and stay) replicated across the mesh
+            fs = self.sharding
+            p, active, rb_tau0, rb_boost = (
+                fs.put_client(a) for a in (p, active, rb_tau0, rb_boost))
+            params = fs.put_replicated(params)
+            if plan is not None:
+                alphas = fs.put_client(alphas, axis_dim=1)
+                idxs = fs.put_client(idxs, axis_dim=1)
 
         ms, off, tau = [], 0, tau_start
         for r in _pow2_chunks(n_rounds, self.chunk_size):

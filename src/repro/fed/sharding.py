@@ -1,0 +1,121 @@
+"""Sharding specs for the federation (client) axis.
+
+The paper's aggregation schemes only become interesting at scale — the
+non-IID effects of inactivity and incomplete updates assume federations of
+hundreds to thousands of devices — so the engine's capacity-slotted client
+buffers (``data_x (C, Nmax, …)``, ``data_y``, ``n``, ``s_cdf``) carry a
+``'data'``-sharded leading axis: each mesh device owns ``C / n_shards``
+client slots, per-client local epochs run fully in parallel across
+devices, and the per-round delta reduction ends in a cross-device
+all-reduce that leaves the global params replicated (no host round-trip).
+
+This module is the single place the slot-buffer layout is decided:
+
+  * :class:`FedSharding` — an immutable spec (mesh + federation axis name)
+    with helpers to place (``put_client`` / ``put_replicated``) and
+    constrain (``constrain_client`` / ``constrain_replicated``) arrays;
+  * :func:`make_fed_sharding` — build a spec over a 1-D ``'data'`` mesh of
+    local devices (``launch/mesh.make_data_mesh``), or over any existing
+    mesh that has a ``'data'`` axis (e.g. the production
+    ``launch/mesh.make_production_mesh``).
+
+Slot ownership invariant: capacity is always padded to a multiple of the
+shard count (``pad_capacity``), so every shard owns the same number of
+whole slots and a slot mutation (``RoundEngine.admit/evict/set_trace``)
+stays one replicated-row ``device_put`` plus a dynamic-update-slice that
+XLA lowers to a masked, shard-local write — membership churn never moves
+data between shards and never recompiles the span scans.
+
+Usage::
+
+    from repro.fed.sharding import make_fed_sharding
+    fs = make_fed_sharding()            # 1-D 'data' mesh over all devices
+    eng = RoundEngine(..., sharding=fs) # client axis sharded over the mesh
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class FedSharding:
+    """Where the federation's client axis lives on the mesh.
+
+    mesh: any jax Mesh with an axis named ``axis`` (default ``'data'``);
+    the client/slot axis of every engine buffer is sharded over it, and
+    everything else (params, scalars) is replicated.
+    """
+    mesh: Mesh
+    axis: str = "data"
+
+    def __post_init__(self):
+        if self.axis not in self.mesh.axis_names:
+            raise ValueError(
+                f"mesh has no {self.axis!r} axis (axes: "
+                f"{self.mesh.axis_names}); the federation axis must name "
+                f"an existing mesh axis")
+
+    # -- geometry -------------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def pad_capacity(self, capacity: int) -> int:
+        """Round capacity up so every shard owns the same number of whole
+        slots (padded slots behave exactly like empty capacity slots)."""
+        n = self.n_shards
+        return -(-capacity // n) * n
+
+    # -- specs ----------------------------------------------------------------
+    def client_spec(self, ndim: int, axis_dim: int = 0) -> P:
+        """PartitionSpec sharding dimension ``axis_dim`` over the
+        federation axis (the leading slot axis of engine buffers; plan
+        arrays carry the client axis at dim 1)."""
+        spec = [None] * ndim
+        spec[axis_dim] = self.axis
+        return P(*spec)
+
+    def client(self, ndim: int, axis_dim: int = 0) -> NamedSharding:
+        return NamedSharding(self.mesh, self.client_spec(ndim, axis_dim))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # -- placement (host -> device, commits the layout) -----------------------
+    def put_client(self, x, axis_dim: int = 0):
+        return jax.device_put(x, self.client(np.ndim(x), axis_dim))
+
+    def put_replicated(self, tree):
+        repl = self.replicated()
+        return jax.tree.map(lambda l: jax.device_put(l, repl), tree)
+
+    # -- constraints (inside jit, steer GSPMD) --------------------------------
+    def constrain_client(self, x, axis_dim: int = 0):
+        return jax.lax.with_sharding_constraint(
+            x, self.client(x.ndim, axis_dim))
+
+    def constrain_client_tree(self, tree, axis_dim: int = 0):
+        return jax.tree.map(
+            lambda l: self.constrain_client(l, axis_dim), tree)
+
+    def constrain_replicated(self, tree):
+        repl = self.replicated()
+        return jax.tree.map(
+            lambda l: jax.lax.with_sharding_constraint(l, repl), tree)
+
+
+def make_fed_sharding(n_devices: Optional[int] = None, *,
+                      mesh: Optional[Mesh] = None,
+                      axis: str = "data") -> FedSharding:
+    """FedSharding over a fresh 1-D ``'data'`` mesh of local devices
+    (n_devices=None uses all of them), or over an existing ``mesh`` that
+    already has the federation axis."""
+    if mesh is None:
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(n_devices)
+    return FedSharding(mesh=mesh, axis=axis)

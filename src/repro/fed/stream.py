@@ -28,6 +28,13 @@ with tau >= event.tau (spans always break at queued event taus, so an
 event pushed before run() fires on its exact round; an event pushed with a
 tau already in the past fires at the next boundary — the honest streaming
 behavior for late-arriving news).
+
+Usage::
+
+    sch = StreamScheduler(clients=clients, init_params=params,
+                          loss_fn=loss_fn, capacity=16,
+                          events=[Arrival(tau=5, client=new_client)])
+    sch.run(n_rounds=20, eval_every=5)   # push() more events, run() again
 """
 from __future__ import annotations
 
@@ -122,6 +129,7 @@ class StreamScheduler:
                  eval_fn: Optional[Callable] = None,
                  capacity: Optional[int] = None,
                  max_samples: Optional[int] = None,
+                 sharding=None,
                  local_epochs: int = 5, batch_size: int = 10,
                  scheme: str = "C", eta0: float = 0.01,
                  chunk_size: int = 16, agg: str = "auto",
@@ -148,7 +156,7 @@ class StreamScheduler:
                 scheme=scheme, eta0=eta0, chunk_size=chunk_size, agg=agg,
                 interpret=interpret, donate=donate,
                 with_metrics=with_metrics, capacity=capacity,
-                max_samples=max_samples)
+                max_samples=max_samples, sharding=sharding)
         self.engine = engine
         self.E = engine.E
         self.B = engine.B

@@ -18,6 +18,8 @@ from repro.kernels.masked_sgd import masked_sgd as _masked_sgd
 from repro.kernels.ssd_chunk import ssd_intra_chunk as _ssd_intra
 from repro.kernels.weighted_agg import resolve_interpret
 from repro.kernels.weighted_agg import weighted_agg as _weighted_agg
+from repro.kernels.weighted_agg import (weighted_agg_sharded as
+                                        _weighted_agg_sharded)
 
 _ENV = os.environ.get("REPRO_PALLAS_INTERPRET")
 # None = auto (backend-aware); otherwise forced by the environment.
@@ -35,6 +37,15 @@ def weighted_agg(coeffs, deltas, *, block=2048, interpret=None,
                  k_block=None):
     return _weighted_agg(coeffs, deltas, block=block,
                          interpret=_interp(interpret), k_block=k_block)
+
+
+def weighted_agg_sharded(coeffs, deltas, *, mesh, axis="data", block=2048,
+                         interpret=None, k_block=None):
+    """weighted_agg over a mesh-sharded client axis: one local launch per
+    device + a psum epilogue -> (D,) replicated on every device."""
+    return _weighted_agg_sharded(coeffs, deltas, mesh=mesh, axis=axis,
+                                 block=block, interpret=_interp(interpret),
+                                 k_block=k_block)
 
 
 def weighted_agg_tree(params, deltas_tree, coeffs, *, interpret=None):

@@ -18,6 +18,16 @@ Two grid layouts:
 
 `interpret=None` auto-detects the backend: compiled Mosaic on TPU,
 interpreter everywhere else (CPU CI containers).
+
+For federations sharded over a mesh, `weighted_agg_sharded` runs one local
+launch per device over its client slab and finishes with a cross-device
+`psum` epilogue, so the reduced (D,) vector comes back replicated on every
+device without a host round-trip.
+
+Usage::
+
+    out = weighted_agg(coeffs, deltas)                    # (K,),(K,D)->(D,)
+    out = weighted_agg_sharded(coeffs, deltas, mesh=mesh) # client-sharded K
 """
 from __future__ import annotations
 
@@ -26,6 +36,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 DEFAULT_BLOCK = 2048
 # Largest client axis kept fully resident per tile before switching to the
@@ -117,3 +129,41 @@ def weighted_agg(coeffs, deltas, *, block: int = DEFAULT_BLOCK,
         interpret=interpret,
     )(coeffs.reshape(1, Kp), deltas)
     return out[0, :D]
+
+
+def _local_agg_psum(coeffs, deltas, *, axis, block, interpret, k_block):
+    """Per-shard body: reduce the local client slab with one (possibly
+    K-tiled) launch, then all-reduce partial sums across the mesh."""
+    out = weighted_agg(coeffs, deltas, block=block, interpret=interpret,
+                       k_block=k_block)
+    return jax.lax.psum(out, axis)
+
+
+def weighted_agg_sharded(coeffs, deltas, *, mesh, axis: str = "data",
+                         block: int = DEFAULT_BLOCK,
+                         interpret: bool | None = None,
+                         k_block: int | None = None):
+    """Cross-device weighted_agg: coeffs (K,) and deltas (K, D) sharded
+    over ``axis`` of ``mesh`` on the client dim -> (D,) f32, replicated.
+
+    Each device makes one local launch over its (K / n_shards, D) slab —
+    the same single-block/K-tiled layout choice as weighted_agg, applied
+    to the local K — followed by a ``psum`` epilogue over ``axis``: the
+    flat delta reduction produces replicated global params with a single
+    all-reduce and no host round-trip.  K must divide evenly over the
+    mesh axis (the engine pads capacity so it always does).
+    """
+    K = deltas.shape[0]
+    n = mesh.shape[axis]
+    if K % n:
+        raise ValueError(
+            f"client axis {K} not divisible by mesh axis {axis!r}={n}; "
+            f"pad the client axis (FedSharding.pad_capacity)")
+    local = functools.partial(
+        _local_agg_psum, axis=axis, block=block,
+        interpret=resolve_interpret(interpret), k_block=k_block)
+    # check_rep=False: shard_map has no replication rule for pallas_call
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axis), P(axis, None)),
+                   out_specs=P(), check_rep=False)
+    return fn(coeffs, deltas)

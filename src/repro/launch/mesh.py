@@ -20,6 +20,14 @@ def make_smoke_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_data_mesh(n_devices=None):
+    """1-D client/data-parallel mesh over local devices — the federation
+    axis used by ``fed.sharding.FedSharding`` (on CPU CI, virtualize with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N)."""
+    n = len(jax.devices()) if n_devices is None else n_devices
+    return jax.make_mesh((n,), ("data",))
+
+
 # v5e hardware constants used by the roofline analysis (benchmarks/roofline)
 PEAK_FLOPS_BF16 = 197e12       # per chip
 HBM_BW = 819e9                 # bytes/s per chip

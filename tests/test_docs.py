@@ -1,0 +1,42 @@
+"""Documentation must not rot: the fenced ``python`` snippets in
+README.md and docs/*.md are executed for real (benchmarks/check_docs.py
+is also wired as ``python -m benchmarks.run --check-docs``).  Snippets
+that need hardware the CI container lacks are tagged ``python no-run``
+and only counted."""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from benchmarks.check_docs import doc_files, extract_blocks, run_file  # noqa: E402
+
+
+def test_doc_set_is_complete():
+    names = {p.name for p in doc_files()}
+    assert {"README.md", "index.md", "engine.md", "streaming.md",
+            "scaling.md"} <= names
+
+
+def test_runnable_snippets_exist():
+    """If the fence tags break (or every snippet gets tagged no-run), the
+    doc gate silently checks nothing — pin the runnable count."""
+    runnable = norun = 0
+    for path in doc_files():
+        for _, info, _ in extract_blocks(path):
+            if info and info[0] == "python":
+                if "no-run" in info:
+                    norun += 1
+                else:
+                    runnable += 1
+    assert runnable >= 4, runnable
+    assert norun >= 1, norun    # the multi-device example stays tagged
+
+
+def test_doc_snippets_execute():
+    total = 0
+    for path in doc_files():
+        ran, _, err = run_file(path, verbose=False)
+        assert err is None, f"{path}:{err[0]}\n{err[1]}"
+        total += ran
+    assert total >= 4
