@@ -1,0 +1,114 @@
+"""Transformer-federation rounds/sec: the large-model engine path.
+
+Runs the device-mode RoundEngine over an LMTask (reduced mamba2-130m —
+the zoo's cheapest CPU-runnable architecture) in both execution modes:
+
+  * client_parallel   — vmapped client axis (per-client param copies);
+  * client_sequential — lax.scan over clients streaming deltas into one
+    accumulator (the memory-bounded >=30B layout).
+
+Best-of-k wall-clock rounds/sec per mode merges into BENCH_engine.json
+under the ``"fedmodel"`` key (and headline series
+``rounds_per_sec.fedmodel_{parallel,sequential}``), extending the perf
+trajectory the engine/sharded benches started.  On this CPU container the
+numbers are a small-scale correctness/trajectory record; on real TPU
+meshes the same series measures the production path.
+
+  PYTHONPATH=src python -m benchmarks.fedmodel_bench       # merges json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+SEQ = 32
+SAMPLES = 12
+E, B = 2, 2
+N_CLIENTS = 4
+
+
+def _make_engine(mode: str, *, chunk: int, seed: int = 0):
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.fed import RoundEngine
+    from repro.fed.task import LMTask
+    from repro.launch.fed_train import build_fleet
+
+    cfg = get_config("mamba2-130m").reduced()
+    task = LMTask(cfg, seq_len=SEQ)
+    clients = build_fleet(task, n_clients=N_CLIENTS, samples=SAMPLES,
+                          seed=seed)
+    eng = RoundEngine(task=task, clients=clients, local_epochs=E,
+                      batch_size=B, scheme="C", eta0=0.05,
+                      chunk_size=chunk, agg="auto", mode=mode)
+    params = task.init_params(jax.random.PRNGKey(seed))
+    cap = eng.capacity
+    kwargs = dict(p=np.full(cap, 1.0 / N_CLIENTS),
+                  active=np.ones(cap, np.float32), lr_shift_tau=0,
+                  reboot_tau0=np.zeros(cap, np.int32),
+                  reboot_boost=np.ones(cap, np.float32))
+    return eng, params, kwargs
+
+
+def _rps(eng, params, kwargs, *, span: int, reps: int):
+    import jax
+
+    key = jax.random.PRNGKey(1)
+    params, _ = eng.run_span(params, 0, span, key=key, **kwargs)  # warm
+    best, tau = float("inf"), span
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        params, _ = eng.run_span(params, tau, span, key=key, **kwargs)
+        jax.block_until_ready(params)
+        best = min(best, time.perf_counter() - t0)
+        tau += span
+    return span / best
+
+
+def run(span: int = 4, reps: int = 2, chunk: int = 4) -> dict:
+    import jax
+
+    res = {}
+    for mode in ("client_parallel", "client_sequential"):
+        eng, params, kwargs = _make_engine(mode, chunk=chunk)
+        res[mode] = round(_rps(eng, params, kwargs, span=span, reps=reps), 3)
+    return {
+        "config": {"arch": "mamba2-130m (reduced)", "clients": N_CLIENTS,
+                   "local_epochs": E, "batch": B, "seq": SEQ,
+                   "span": span, "reps": reps, "chunk_size": chunk,
+                   "backend": jax.default_backend()},
+        "rounds_per_sec": {"parallel": res["client_parallel"],
+                           "sequential": res["client_sequential"]},
+    }
+
+
+def main(path: str = "BENCH_engine.json", **kw) -> dict:
+    out = run(**kw)
+    blob = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            blob = json.load(f)
+    blob["fedmodel"] = out
+    blob.setdefault("rounds_per_sec", {})
+    blob["rounds_per_sec"]["fedmodel_parallel"] = \
+        out["rounds_per_sec"]["parallel"]
+    blob["rounds_per_sec"]["fedmodel_sequential"] = \
+        out["rounds_per_sec"]["sequential"]
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=2)
+        f.write("\n")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_engine.json")
+    ap.add_argument("--span", type=int, default=4)
+    ap.add_argument("--reps", type=int, default=2)
+    args = ap.parse_args()
+    print(json.dumps(main(args.json, span=args.span, reps=args.reps),
+                     indent=2))

@@ -36,6 +36,8 @@ def main() -> None:
                     help="skip the streaming-participation benchmark")
     ap.add_argument("--skip-sharded", action="store_true",
                     help="skip the sharded-vs-single engine benchmark")
+    ap.add_argument("--skip-fedmodel", action="store_true",
+                    help="skip the transformer-federation benchmark")
     ap.add_argument("--check-docs", action="store_true",
                     help="execute the fenced python snippets in README.md "
                          "and docs/*.md, then exit (CI docs-rot gate)")
@@ -92,6 +94,15 @@ def main() -> None:
         print(f"speedup_sharded_vs_single,"
               f"{res['speedup_sharded_vs_single']}")
         print(f"admit_us_sharded,{res['admit_us_sharded']}")
+        print(f"# merged into {args.bench_json}")
+        sys.stdout.flush()
+
+    if not args.skip_fedmodel:
+        from benchmarks.fedmodel_bench import main as fedmodel_main
+        res = fedmodel_main(args.bench_json)
+        print("\n# fedmodel: mode,rounds_per_sec")
+        for mode, rps in res["rounds_per_sec"].items():
+            print(f"{mode},{rps}")
         print(f"# merged into {args.bench_json}")
         sys.stdout.flush()
 

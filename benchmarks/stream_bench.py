@@ -52,6 +52,31 @@ def _admit_evict_us(engine, client, iters: int = 30):
     return admit_us, evict_us
 
 
+def _admit_burst_us(engine, clients, iters: int = 10):
+    """µs per admitted row when an arrival burst coalesces into one
+    admit_many (fused stacked device_put + scatter per buffer) vs the
+    same rows via k single admits."""
+    k = len(clients)
+    slots = list(range(engine.capacity - k, engine.capacity))
+    pairs = list(zip(slots, clients))
+    engine.admit_many(pairs)              # warmup: compile the scatter
+    jax.block_until_ready(engine.s_cdf)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        engine.admit_many(pairs)
+    jax.block_until_ready(engine.s_cdf)
+    burst_us = (time.perf_counter() - t0) / (iters * k) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        for slot, c in pairs:
+            engine.admit(slot, c)
+    jax.block_until_ready(engine.s_cdf)
+    single_us = (time.perf_counter() - t0) / (iters * k) * 1e6
+    for slot, _ in pairs:
+        engine.evict(slot)
+    return burst_us, single_us
+
+
 def _churn_events(tau0: int, span: int, next_id: int, rep: int):
     """One rep's worth of sustained churn: two brand-new arrivals that
     depart again inside the span (net slot balance zero), a trace shift
@@ -101,6 +126,9 @@ def run(span=24, reps=5, seed=0, mode="device", chunk=16):
     admit_us, evict_us = _admit_evict_us(
         static.engine, _make_clients(1, seed=seed + 1)[0])
     cycle_us = admit_us + evict_us
+    burst_k = min(4, static.engine.capacity)
+    burst_us, burst_single_us = _admit_burst_us(
+        static.engine, _make_clients(burst_k, seed=seed + 2))
 
     # one full scenario replay for the record (honest NaN-filtered summary)
     sch, summary = None, None
@@ -123,6 +151,10 @@ def run(span=24, reps=5, seed=0, mode="device", chunk=16):
             max(0.0, 1.0 - rps_churn / rps_static), 4),
         "admit_us": round(admit_us, 1),
         "evict_us": round(evict_us, 1),
+        "admit_burst_k": burst_k,
+        "admit_burst_us_per_row": round(burst_us, 1),
+        "admit_burst_single_us_per_row": round(burst_single_us, 1),
+        "admit_burst_speedup": round(burst_single_us / burst_us, 2),
         "events_per_sec_absorbed": round(2e6 / cycle_us, 1),
         "scenario_replay": {"wall_s": round(scenario_wall, 3),
                             **summary},

@@ -48,9 +48,38 @@ def local_sgd(loss_fn: Callable, params, client_batches, alpha_e, eta):
         w_end, params)
 
 
+def _constrain_client_deltas(sharding, deltas, param_specs):
+    """Constrain stacked client deltas (leaves (C, ...)): the client dim
+    over the federation axes, the trailing dims per the model's param
+    spec (or unsharded for replicated small-model params)."""
+    if param_specs is None:
+        return sharding.constrain_client_tree(deltas)
+    entry = sharding._entry()
+    return jax.tree.map(
+        lambda d, s: jax.lax.with_sharding_constraint(
+            d, sharding.param_sharding(
+                jax.sharding.PartitionSpec(entry, *s))),
+        deltas, param_specs)
+
+
+def _constrain_batch(sharding, batches, axis_dim: int):
+    """Shard the batch dim of a batch pytree over the federation axes
+    when it divides evenly (the client-sequential data-parallel layout);
+    leave ragged dims to GSPMD."""
+    n = sharding.n_shards
+
+    def con(l):
+        if l.ndim > axis_dim and l.shape[axis_dim] % n == 0:
+            return sharding.constrain_client(l, axis_dim)
+        return l
+
+    return jax.tree.map(con, batches)
+
+
 def fed_round_parallel(loss_fn, params, batches, alpha, coeffs, eta, *,
                        agg: str = "tree", interpret=None,
-                       with_metrics: bool = True, sharding=None):
+                       with_metrics: bool = True, sharding=None,
+                       param_specs=None):
     """batches: pytree (C, E, ...); alpha: (C, E); coeffs: (C,).
     Returns (new_params, metrics).
 
@@ -60,14 +89,17 @@ def fed_round_parallel(loss_fn, params, batches, alpha, coeffs, eta, *,
     with_metrics=False skips the delta-norm reduction (hot-loop mode).
 
     sharding: optional fed.sharding.FedSharding — the client axis of
-    batches/alpha/deltas is constrained to the mesh's federation axis so
-    local epochs run device-parallel, and the aggregated params come back
-    replicated (via GSPMD all-reduce for "tree", an explicit shard_map
-    psum epilogue for "flat")."""
+    batches/alpha/deltas is constrained to the mesh's federation axis
+    (or composite axes, e.g. ('pod', 'data')) so local epochs run
+    device-parallel, and the delta reduction psums over exactly the
+    federation axes.  param_specs (a PartitionSpec pytree matching
+    params, see models.sharding.tree_param_specs) keeps params sharded
+    over the mesh's model/FSDP axes through the round — without it the
+    aggregated params come back replicated (small-model path)."""
     deltas = jax.vmap(lambda b, a: local_sgd(loss_fn, params, b, a, eta))(
         batches, alpha)
     if sharding is not None:
-        deltas = sharding.constrain_client_tree(deltas)
+        deltas = _constrain_client_deltas(sharding, deltas, param_specs)
     if agg == "flat":
         new_params = aggregate_deltas_flat(params, deltas, coeffs,
                                            interpret=interpret,
@@ -75,7 +107,7 @@ def fed_round_parallel(loss_fn, params, batches, alpha, coeffs, eta, *,
     else:
         new_params = aggregate_deltas(params, deltas, coeffs)
     if sharding is not None:
-        new_params = sharding.constrain_replicated(new_params)
+        new_params = sharding.constrain_params(new_params, param_specs)
     if not with_metrics:
         return new_params, {"delta_norm": jnp.float32(0)}
     dn = jnp.sqrt(sum(jnp.sum(jnp.square(x))
@@ -83,20 +115,49 @@ def fed_round_parallel(loss_fn, params, batches, alpha, coeffs, eta, *,
     return new_params, {"delta_norm": dn}
 
 
-def fed_round_sequential(loss_fn, params, batches, alpha, coeffs, eta):
-    """Same contract as fed_round_parallel; clients scanned to bound memory
-    (global params + weighted accumulator + one live client copy)."""
+def fed_round_sequential(loss_fn, params, batches, alpha, coeffs, eta, *,
+                         with_metrics: bool = True, sharding=None,
+                         param_specs=None):
+    """Same contract as fed_round_parallel; clients scanned to bound
+    memory: only the global params, the streaming aggregation accumulator
+    and ONE live client delta exist at a time — never a (C, D_total) or
+    per-client parameter stack.  This is the >=30B path.
 
-    acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    Under ``sharding`` each client's *batch* dim is data-parallel over
+    the federation axes (GSPMD psums the gradient over exactly those
+    axes) while params and the accumulator stay sharded per
+    ``param_specs`` (FSDP x TP over the mesh's model axes) — the
+    federated round never materializes a replicated copy of the model."""
+    if sharding is not None:
+        params = sharding.constrain_params(params, param_specs)
 
-    def one_client(acc, xs):
+    def con_acc(acc):
+        if sharding is not None:
+            return sharding.constrain_params(acc, param_specs)
+        return acc
+
+    acc0 = con_acc(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def one_client(carry, xs):
+        acc, dn2 = carry
         b_c, a_c, c_c = xs
+        if sharding is not None:
+            # (E, B, ...): batch dim 1 shards over the federation axes
+            b_c = _constrain_batch(sharding, b_c, axis_dim=1)
         delta = local_sgd(loss_fn, params, b_c, a_c, eta)
-        return accumulate_delta(acc, delta, c_c), None
+        acc = con_acc(accumulate_delta(acc, delta, c_c))
+        if with_metrics:
+            dn2 = dn2 + sum(jnp.sum(jnp.square(x))
+                            for x in jax.tree.leaves(delta))
+        return (acc, dn2), None
 
-    acc, _ = jax.lax.scan(one_client, acc0, (batches, alpha, coeffs))
+    (acc, dn2), _ = jax.lax.scan(one_client, (acc0, jnp.float32(0)),
+                                 (batches, alpha, coeffs))
     new_params = apply_accumulator(params, acc)
-    dn = jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(acc)))
+    if sharding is not None:
+        new_params = sharding.constrain_params(new_params, param_specs)
+    dn = jnp.sqrt(dn2) if with_metrics else jnp.float32(0)
     return new_params, {"delta_norm": dn}
 
 
@@ -106,6 +167,9 @@ def make_fed_round(loss_fn, mode: str = "client_parallel",
     if mode == "client_parallel":
         return functools.partial(fed_round_parallel, loss_fn, agg=agg,
                                  interpret=interpret)
+    if mode != "client_sequential":
+        raise ValueError(f"mode must be client_parallel|client_sequential, "
+                         f"got {mode!r}")
     return functools.partial(fed_round_sequential, loss_fn)
 
 

@@ -4,8 +4,9 @@ from repro.fed.sharding import FedSharding, make_fed_sharding
 from repro.fed.stream import (Arrival, Departure, InactivityBurst,
                               ParticipationEvent, StreamScheduler,
                               TraceShift)
+from repro.fed.task import ArrayTask, ClientTask, LMTask
 
 __all__ = ["Client", "FederatedTrainer", "RoundRecord", "RoundEngine",
            "Arrival", "Departure", "InactivityBurst", "ParticipationEvent",
            "StreamScheduler", "TraceShift", "FedSharding",
-           "make_fed_sharding"]
+           "make_fed_sharding", "ArrayTask", "ClientTask", "LMTask"]

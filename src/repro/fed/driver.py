@@ -42,9 +42,14 @@ from repro.fed.engine import RoundEngine
 
 @dataclass
 class Client:
+    """One federated device: per-sample arrays + availability trace.
+
+    ``x`` holds whatever the active ClientTask stores per sample — feature
+    rows for the paper models, token sequences ``(n, S+1)`` for the LM
+    path (``y``/test arrays stay None there)."""
     x: np.ndarray
-    y: np.ndarray
-    trace: Trace
+    y: Optional[np.ndarray] = None
+    trace: Trace = None
     x_test: Optional[np.ndarray] = None
     y_test: Optional[np.ndarray] = None
     # membership
@@ -55,7 +60,7 @@ class Client:
 
     @property
     def n(self) -> int:
-        return len(self.y)
+        return len(self.y) if self.y is not None else len(self.x)
 
 
 @dataclass
@@ -70,7 +75,8 @@ class RoundRecord:
 
 
 class FederatedTrainer:
-    def __init__(self, *, loss_fn: Callable, eval_fn: Callable,
+    def __init__(self, *, loss_fn: Optional[Callable] = None,
+                 eval_fn: Optional[Callable] = None,
                  init_params, clients: List[Client], local_epochs: int = 5,
                  batch_size: int = 10, scheme: str = "C", eta0: float = 0.01,
                  reboot_boost: float = 3.0, fast_reboot: bool = True,
@@ -79,7 +85,15 @@ class FederatedTrainer:
                  seed: int = 0, engine: Optional[str] = "plan",
                  chunk_size: int = 16, agg: str = "auto",
                  interpret=None, donate: Optional[bool] = None,
-                 with_metrics: bool = False, sharding=None):
+                 with_metrics: bool = False, sharding=None,
+                 task=None, mode: str = "client_parallel"):
+        self.task = task
+        self.mode = mode
+        if loss_fn is None:
+            if task is None:
+                raise ValueError("pass loss_fn= (or a task= that carries "
+                                 "one)")
+            loss_fn = task.loss_fn
         self.loss_fn = loss_fn
         self.eval_fn = eval_fn  # eval_fn(params, x, y) -> (loss, acc)
         self.params = init_params
@@ -122,11 +136,13 @@ class FederatedTrainer:
     def engine(self) -> RoundEngine:
         if self._engine is None:
             self._engine = RoundEngine(
-                loss_fn=self.loss_fn, clients=self.clients,
+                loss_fn=None if self.task is not None else self.loss_fn,
+                task=self.task, clients=self.clients,
                 local_epochs=self.E, batch_size=self.B, scheme=self.scheme,
                 eta0=self.eta0, chunk_size=self.chunk_size, agg=self.agg,
                 interpret=self.interpret, donate=self.donate,
-                with_metrics=self.with_metrics, sharding=self.sharding)
+                with_metrics=self.with_metrics, sharding=self.sharding,
+                mode=self.mode)
         return self._engine
 
     # -- weights over the current objective set -----------------------------
@@ -279,8 +295,13 @@ class FederatedTrainer:
 
     def evaluate(self, include_idx: Optional[set] = None):
         idx = include_idx if include_idx is not None else self.objective
-        xs = np.concatenate([self.clients[i].x_test for i in idx
-                             if self.clients[i].x_test is not None])
-        ys = np.concatenate([self.clients[i].y_test for i in idx
-                             if self.clients[i].y_test is not None])
-        return self.eval_fn(self.params, jnp.asarray(xs), jnp.asarray(ys))
+        xs = [self.clients[i].x_test for i in idx
+              if self.clients[i].x_test is not None]
+        ys = [self.clients[i].y_test for i in idx
+              if self.clients[i].y_test is not None]
+        if self.eval_fn is None or not xs:
+            # task-only construction (e.g. LM clients without held-out
+            # arrays): honest-NaN records, same as the scheduler's path
+            return float("nan"), float("nan")
+        return self.eval_fn(self.params, jnp.asarray(np.concatenate(xs)),
+                            jnp.asarray(np.concatenate(ys)))

@@ -53,7 +53,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import scheme_coefficients
-from repro.core.fed_step import fed_round_parallel
+from repro.core.fed_step import fed_round_parallel, fed_round_sequential
+from repro.fed.task import ArrayTask
 
 
 def _pow2_chunks(n: int, cap: int):
@@ -151,8 +152,47 @@ def _slot_write(buf, row, slot):
 _slot_write = jax.jit(_slot_write)
 
 
+@functools.lru_cache(maxsize=64)
+def _slots_writer(sharding):
+    """Jitted burst scatter (admit_many), pinned to the buffer's own
+    sharding: without out_shardings the scatter result can come back
+    replicated, silently changing the compiled span fns' input layout
+    (one recompile per churn event — exactly what the slot machinery
+    exists to avoid).  Cached per sharding object; rows: (k, ...)
+    stacked, slots: (k,) int32, duplicate slots carry identical rows
+    (pow2 padding repeats the last pair), so scatter order cannot
+    matter."""
+    return jax.jit(lambda buf, rows, slots: buf.at[slots].set(rows),
+                   out_shardings=sharding)
+
+
+def _slots_write(buf, rows, slots):
+    return _slots_writer(buf.sharding)(buf, rows, slots)
+
+
+def _pow2_pad(k: int) -> int:
+    """Next power of two >= k: bursts of any size reuse at most
+    log2(capacity)+1 compiled scatter shapes per buffer."""
+    return 1 << (k - 1).bit_length() if k > 1 else 1
+
+
 class RoundEngine:
     """Runs R federated rounds per host dispatch on device-resident data.
+
+    The model/step layer is a ClientTask (fed/task.py): the task names
+    the per-sample buffers, maps gathered samples to loss batches, and
+    (for sharded large models) supplies per-leaf param PartitionSpecs.
+    ``loss_fn=`` remains as the legacy constructor — it wraps into the
+    equivalent ArrayTask.  Two execution modes share every other engine
+    mechanism (sampling, slots, chunking, schemes):
+
+      mode="client_parallel"   — vmap over the client axis (the small-
+                                 model fast path; per-client param copies
+                                 are live simultaneously);
+      mode="client_sequential" — lax.scan over clients streaming each
+                                 masked-SGD delta into one aggregation
+                                 accumulator (global params + one live
+                                 client delta; required >= 30B).
 
     Membership, data weights p, the LR-restart round and reboot state are
     constant within a span (the trainer splits spans at every event), so
@@ -178,15 +218,32 @@ class RoundEngine:
     unchanged under sharding.
     """
 
-    def __init__(self, *, loss_fn, clients, local_epochs: int,
-                 batch_size: int, scheme: str = "C", eta0: float = 0.01,
+    def __init__(self, *, clients, local_epochs: int,
+                 batch_size: int, loss_fn=None, task=None,
+                 scheme: str = "C", eta0: float = 0.01,
                  chunk_size: int = 16, agg: str = "auto",
                  interpret=None, donate: Optional[bool] = None,
                  with_metrics: bool = False,
                  capacity: Optional[int] = None,
                  max_samples: Optional[int] = None,
-                 sharding=None):
-        self.loss_fn = loss_fn
+                 sharding=None, mode: str = "client_parallel"):
+        if (task is None) == (loss_fn is None):
+            raise ValueError("pass exactly one of task= or loss_fn=")
+        if task is None:
+            # legacy construction: a bare loss over {"x", "y"} batches —
+            # wrap it in the equivalent ArrayTask (feature shape fixed by
+            # the founding clients, exactly as before the refactor)
+            if not clients:
+                raise ValueError("RoundEngine needs at least one founding "
+                                 "client (fixes the feature shape)")
+            task = ArrayTask(loss_fn,
+                             np.asarray(clients[0].x).shape[1:])
+        self.task = task
+        self.loss_fn = task.loss_fn
+        if mode not in ("client_parallel", "client_sequential"):
+            raise ValueError(f"mode must be client_parallel|"
+                             f"client_sequential, got {mode!r}")
+        self.mode = mode
         self.E = local_epochs
         self.B = batch_size
         self.scheme = scheme
@@ -205,34 +262,36 @@ class RoundEngine:
 
         self.sharding = sharding
         C = len(clients)
-        if C == 0:
-            raise ValueError("RoundEngine needs at least one founding "
-                             "client (fixes the feature shape)")
+        if C == 0 and (capacity is None or max_samples is None):
+            # a task fixes feature shapes, but an empty engine still needs
+            # explicit geometry (the founding fleet normally supplies it)
+            raise ValueError("RoundEngine without founding clients needs "
+                             "explicit capacity= and max_samples=")
         if capacity is None:
             capacity = C
-        if capacity < C:
+        if capacity < max(C, 1):
             raise ValueError(f"capacity {capacity} < {C} founding clients")
         if sharding is not None:
             # every shard owns the same number of whole slots; the extra
             # columns are ordinary empty capacity slots (p=0, never train)
             capacity = sharding.pad_capacity(capacity)
         self.capacity = capacity
-        ns = [c.n for c in clients]
-        nmax = max(ns)
+        nmax = max((c.n for c in clients), default=1)
         if max_samples is not None:
             nmax = max(nmax, max_samples)
         self.nmax = nmax
-        x0 = np.asarray(clients[0].x)
-        self._xdim = x0.shape[1:]
-        X = np.zeros((capacity, nmax) + self._xdim, np.float32)
-        Y = np.zeros((capacity, nmax), np.int32)
+        # per-sample buffers are the task's business: one (capacity, Nmax,
+        # *spec.shape) stack per named buffer (logreg: x/y; LM: tokens)
+        stacks = {
+            name: np.zeros((capacity, nmax) + spec.shape, spec.dtype)
+            for name, spec in task.buffers.items()}
         # empty slots keep n=1 so the batch-index draw idx = min(u*n, n-1)
         # stays a valid gather (their alpha/coeff are 0 regardless)
         n_arr = np.ones(capacity, np.int32)
         cdf = np.tile(empty_slot_cdf(self.E), (capacity, 1))
         for i, c in enumerate(clients):
-            X[i, :c.n] = c.x
-            Y[i, :c.n] = c.y
+            for name, arr in self._client_rows(c).items():
+                stacks[name][i, :c.n] = arr
             n_arr[i] = c.n
         cdf[:C] = trace_s_cdf(clients, self.E)
         # datasets move host->device exactly once, here; under sharding
@@ -244,11 +303,69 @@ class RoundEngine:
                 a, sharding.replicated())
         else:
             self._put_slots = self._put_row = jax.device_put
-        self.data_x = self._put_slots(X)
-        self.data_y = self._put_slots(Y)
+        self.data = {name: self._put_slots(buf)
+                     for name, buf in stacks.items()}
         self.n = self._put_slots(n_arr)
         self.s_cdf = self._put_slots(cdf)
         self._fns = {}
+        self._pspecs = None
+        self._pspecs_built = False
+
+    def _client_rows(self, client):
+        """The task's per-sample arrays for one client, shape-checked
+        against the engine's buffer specs."""
+        arrays = self.task.client_arrays(client)
+        for name, arr in arrays.items():
+            spec = self.task.buffers[name]
+            if arr.shape != (client.n,) + spec.shape:
+                raise ValueError(
+                    f"feature shape {arr.shape[1:]} != engine feature "
+                    f"shape {spec.shape} (buffer {name!r})")
+        return arrays
+
+    def _param_specs(self, params):
+        """The task's per-leaf PartitionSpecs (None => replicated),
+        resolved once — only consulted under sharding.
+
+        client_parallel vmaps a client axis over the federation axes, so
+        a param spec may not also claim them (FSDP and client-parallelism
+        would name the same mesh axis twice); the federation axes are
+        stripped from every leaf spec, leaving pure TP ('model') sharding
+        — the client_sequential mode keeps full FSDP x TP specs."""
+        if not self._pspecs_built:
+            specs = self.task.param_specs(params)
+            if (specs is not None and self.sharding is not None
+                    and self.mode == "client_parallel"):
+                from jax.sharding import PartitionSpec as P
+                fed = set(self.sharding.axes)
+
+                def strip(entry):
+                    if entry is None:
+                        return None
+                    if isinstance(entry, (tuple, list)):
+                        kept = tuple(a for a in entry if a not in fed)
+                        if not kept:
+                            return None
+                        # singleton tuples normalize to the bare name
+                        # (tuple/bare spellings are cache-key-distinct)
+                        return kept[0] if len(kept) == 1 else kept
+                    return None if entry in fed else entry
+
+                specs = jax.tree.map(
+                    lambda s: P(*(strip(e) for e in s)), specs,
+                    is_leaf=lambda x: isinstance(x, P))
+            self._pspecs = specs
+            self._pspecs_built = True
+        return self._pspecs
+
+    # legacy buffer aliases (pre-ClientTask layout)
+    @property
+    def data_x(self):
+        return self.data["x"]
+
+    @property
+    def data_y(self):
+        return self.data["y"]
 
     # -- capacity-slot lifecycle ----------------------------------------------
     def admit(self, slot: int, client) -> None:
@@ -258,26 +375,75 @@ class RoundEngine:
         are static, so no compiled span scan is invalidated."""
         if not 0 <= slot < self.capacity:
             raise IndexError(f"slot {slot} out of range [0, {self.capacity})")
+        rows = self._staged_rows(client)
+        s = jnp.int32(slot)
+        for name, row in rows.items():
+            self.data[name] = _slot_write(self.data[name],
+                                          self._put_row(row), s)
+        self.n = _slot_write(self.n, jnp.int32(client.n), s)
+        self.s_cdf = _slot_write(
+            self.s_cdf, self._put_row(trace_cdf_row(client.trace, self.E)),
+            s)
+
+    def _staged_rows(self, client):
+        """Zero-padded (Nmax, *spec.shape) rows for every task buffer."""
         if client.n > self.nmax:
             raise ValueError(
                 f"client has {client.n} samples > slot capacity "
                 f"{self.nmax}; build the engine with max_samples >= "
                 f"{client.n}")
-        x = np.asarray(client.x, np.float32)
-        if x.shape[1:] != self._xdim:
-            raise ValueError(f"feature shape {x.shape[1:]} != engine "
-                             f"feature shape {self._xdim}")
-        xrow = np.zeros((self.nmax,) + self._xdim, np.float32)
-        yrow = np.zeros(self.nmax, np.int32)
-        xrow[:client.n] = x
-        yrow[:client.n] = client.y
-        s = jnp.int32(slot)
-        self.data_x = _slot_write(self.data_x, self._put_row(xrow), s)
-        self.data_y = _slot_write(self.data_y, self._put_row(yrow), s)
-        self.n = _slot_write(self.n, jnp.int32(client.n), s)
-        self.s_cdf = _slot_write(
-            self.s_cdf, self._put_row(trace_cdf_row(client.trace, self.E)),
-            s)
+        rows = {}
+        for name, arr in self._client_rows(client).items():
+            spec = self.task.buffers[name]
+            row = np.zeros((self.nmax,) + spec.shape, spec.dtype)
+            row[:client.n] = arr
+            rows[name] = row
+        return rows
+
+    def admit_many(self, assignments) -> None:
+        """Admit an arrival burst in one fused update per buffer.
+
+        assignments: sequence of (slot, client) pairs.  Per-client row
+        staging happens host-side as in admit(), but the whole burst goes
+        up as ONE stacked device_put + ONE jitted scatter per buffer
+        (``buf.at[slots].set(rows)``) instead of k separate transfers and
+        dynamic-update-slices — under sharding every transfer replicates
+        the rows to all devices, so coalescing cuts the dominant cost by
+        ~k.  Bursts are padded to a power-of-two length by repeating the
+        last (slot, row) pair, so at most log2(capacity)+1 scatter shapes
+        ever compile per buffer (the zero-recompile churn contract)."""
+        assignments = list(assignments)
+        if not assignments:
+            return
+        if len(assignments) == 1:
+            self.admit(*assignments[0])
+            return
+        for slot, _ in assignments:
+            if not 0 <= slot < self.capacity:
+                raise IndexError(
+                    f"slot {slot} out of range [0, {self.capacity})")
+        dup = [s for s, _ in assignments]
+        if len(set(dup)) != len(dup):
+            # duplicate-index scatter order is unspecified per buffer, so
+            # one slot could mix two clients' rows across buffers
+            raise ValueError(f"admit_many got duplicate slots: {dup}")
+        staged = [self._staged_rows(c) for _, c in assignments]
+        slots = [s for s, _ in assignments]
+        ns = [c.n for _, c in assignments]
+        cdfs = [trace_cdf_row(c.trace, self.E) for _, c in assignments]
+        k = len(assignments)
+        pad = _pow2_pad(k) - k
+        slots = np.asarray(slots + [slots[-1]] * pad, np.int32)
+        ns = np.asarray(ns + [ns[-1]] * pad, np.int32)
+        cdf_rows = np.stack(cdfs + [cdfs[-1]] * pad)
+        sl = jax.device_put(slots)
+        for name in self.task.buffers:
+            rows = np.stack([st[name] for st in staged]
+                            + [staged[-1][name]] * pad)
+            self.data[name] = _slots_write(self.data[name],
+                                           self._put_row(rows), sl)
+        self.n = _slots_write(self.n, jax.device_put(ns), sl)
+        self.s_cdf = _slots_write(self.s_cdf, self._put_row(cdf_rows), sl)
 
     def evict(self, slot: int) -> None:
         """Free a slot: its s-law collapses to the empty-slot atom at 0
@@ -300,10 +466,11 @@ class RoundEngine:
             jnp.int32(slot))
 
     # -- jitted chunk builders ------------------------------------------------
-    def _round_core(self, params, data_x, data_y, alpha, idx, tau, p,
+    def _round_core(self, params, data, alpha, idx, tau, p,
                     rb_tau0, rb_boost, lr_shift):
         gather = jax.vmap(lambda d, i: jnp.take(d, i, axis=0))
-        batches = {"x": gather(data_x, idx), "y": gather(data_y, idx)}
+        batches = self.task.make_batch(
+            {name: gather(buf, idx) for name, buf in data.items()})
         s = jnp.sum(alpha, axis=-1)
         coeffs = scheme_coefficients(self.scheme, p, s, self.E)
         # fast-reboot boost, exact O((tau-tau0)^-2) decay at every in-chunk
@@ -312,10 +479,24 @@ class RoundEngine:
         coeffs = coeffs * (1.0 + (rb_boost - 1.0) / jnp.square(1.0 + dt))
         eta = jnp.float32(self.eta0) / jnp.maximum(
             (tau + 1 - lr_shift).astype(jnp.float32), 1.0)
-        new_params, m = fed_round_parallel(
-            self.loss_fn, params, batches, alpha, coeffs, eta,
-            agg=self.agg, interpret=self.interpret,
-            with_metrics=self.with_metrics, sharding=self.sharding)
+        pspecs = (self._param_specs(params) if self.sharding is not None
+                  else None)
+        if self.mode == "client_sequential":
+            new_params, m = fed_round_sequential(
+                self.loss_fn, params, batches, alpha, coeffs, eta,
+                with_metrics=self.with_metrics, sharding=self.sharding,
+                param_specs=pspecs)
+        else:
+            # model-spec'd params must take the tree path: the flat
+            # layout concatenates mixed-sharding delta leaves (the GSPMD
+            # pattern safe_concat exists for) and materializes the
+            # reduced (D_total,) vector replicated over the model axes
+            agg = "tree" if pspecs is not None else self.agg
+            new_params, m = fed_round_parallel(
+                self.loss_fn, params, batches, alpha, coeffs, eta,
+                agg=agg, interpret=self.interpret,
+                with_metrics=self.with_metrics, sharding=self.sharding,
+                param_specs=pspecs)
         return new_params, {"s": s, "eta": eta,
                             "delta_norm": m["delta_norm"]}
 
@@ -325,7 +506,7 @@ class RoundEngine:
             return self._fns[cache_key]
 
         if sampled:
-            def chunk(params, data_x, data_y, n, s_cdf, key, active, taus,
+            def chunk(params, data, n, s_cdf, key, active, taus,
                       p, rb_tau0, rb_boost, lr_shift):
                 alphas, idxs = device_sample_span(
                     key, R, active, n, s_cdf, self.E, self.B)
@@ -336,16 +517,16 @@ class RoundEngine:
 
                 def body(w, xs):
                     alpha, idx, tau = xs
-                    return self._round_core(w, data_x, data_y, alpha, idx,
+                    return self._round_core(w, data, alpha, idx,
                                             tau, p, rb_tau0, rb_boost,
                                             lr_shift)
                 return jax.lax.scan(body, params, (alphas, idxs, taus))
         else:
-            def chunk(params, data_x, data_y, alphas, idxs, taus, p,
+            def chunk(params, data, alphas, idxs, taus, p,
                       rb_tau0, rb_boost, lr_shift):
                 def body(w, xs):
                     alpha, idx, tau = xs
-                    return self._round_core(w, data_x, data_y, alpha, idx,
+                    return self._round_core(w, data, alpha, idx,
                                             tau, p, rb_tau0, rb_boost,
                                             lr_shift)
                 return jax.lax.scan(body, params, (alphas, idxs, taus))
@@ -384,11 +565,12 @@ class RoundEngine:
             idxs = jnp.asarray(plan[1], jnp.int32)
         if self.sharding is not None:
             # span args are per-slot columns -> shard with the buffers;
-            # params enter (and stay) replicated across the mesh
+            # params enter replicated (small models) or stay sharded per
+            # the task's model specs (the large-model FSDP x TP path)
             fs = self.sharding
             p, active, rb_tau0, rb_boost = (
                 fs.put_client(a) for a in (p, active, rb_tau0, rb_boost))
-            params = fs.put_replicated(params)
+            params = fs.put_params(params, self._param_specs(params))
             if plan is not None:
                 alphas = fs.put_client(alphas, axis_dim=1)
                 idxs = fs.put_client(idxs, axis_dim=1)
@@ -398,14 +580,14 @@ class RoundEngine:
             taus = jnp.arange(tau, tau + r, dtype=jnp.int32)
             if plan is not None:
                 fn = self._get_fn(r, sampled=False)
-                params, m = fn(params, self.data_x, self.data_y,
+                params, m = fn(params, self.data,
                                alphas[off:off + r], idxs[off:off + r],
                                taus, p, rb_tau0, rb_boost, lr_shift)
             else:
                 fn = self._get_fn(r, sampled=True)
                 # fold per chunk so split chunks never reuse randomness
                 sub = jax.random.fold_in(key, tau)
-                params, m = fn(params, self.data_x, self.data_y, self.n,
+                params, m = fn(params, self.data, self.n,
                                self.s_cdf, sub, active, taus, p,
                                rb_tau0, rb_boost, lr_shift)
             ms.append(jax.tree.map(np.asarray, m))

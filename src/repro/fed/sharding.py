@@ -3,21 +3,31 @@
 The paper's aggregation schemes only become interesting at scale — the
 non-IID effects of inactivity and incomplete updates assume federations of
 hundreds to thousands of devices — so the engine's capacity-slotted client
-buffers (``data_x (C, Nmax, …)``, ``data_y``, ``n``, ``s_cdf``) carry a
-``'data'``-sharded leading axis: each mesh device owns ``C / n_shards``
+buffers (``data buffers (C, Nmax, …)``, ``n``, ``s_cdf``) carry a
+federation-sharded leading axis: each mesh device owns ``C / n_shards``
 client slots, per-client local epochs run fully in parallel across
 devices, and the per-round delta reduction ends in a cross-device
-all-reduce that leaves the global params replicated (no host round-trip).
+all-reduce over the federation axes.
 
 This module is the single place the slot-buffer layout is decided:
 
-  * :class:`FedSharding` — an immutable spec (mesh + federation axis name)
-    with helpers to place (``put_client`` / ``put_replicated``) and
-    constrain (``constrain_client`` / ``constrain_replicated``) arrays;
+  * :class:`FedSharding` — an immutable spec (mesh + federation axis
+    name(s)) with helpers to place (``put_client`` / ``put_replicated``)
+    and constrain (``constrain_client`` / ``constrain_replicated``)
+    arrays;
   * :func:`make_fed_sharding` — build a spec over a 1-D ``'data'`` mesh of
     local devices (``launch/mesh.make_data_mesh``), or over any existing
-    mesh that has a ``'data'`` axis (e.g. the production
+    mesh that has the federation axes (e.g. the production
     ``launch/mesh.make_production_mesh``).
+
+Composite federation axes: ``axis`` may be a single mesh-axis name
+(``'data'``) or a tuple (``('pod', 'data')``) for multi-pod federations —
+the client axis then shards over the *product* of those axes
+(``P(('pod', 'data'))``) and every cross-device reduction psums over
+exactly that set.  Axes of the mesh **not** named (e.g. ``'model'``) are
+left alone: params may stay sharded over them per the model's partition
+specs (FSDP x TP, ``models/sharding.py``), which is how one mesh carries
+both the federation and the large-model layout — see docs/scaling.md.
 
 Slot ownership invariant: capacity is always padded to a multiple of the
 shard count (``pad_capacity``), so every shard owns the same number of
@@ -31,11 +41,14 @@ Usage::
     from repro.fed.sharding import make_fed_sharding
     fs = make_fed_sharding()            # 1-D 'data' mesh over all devices
     eng = RoundEngine(..., sharding=fs) # client axis sharded over the mesh
+
+    # multi-pod federation: clients shard over pod x data
+    fs = make_fed_sharding(mesh=pod_mesh, axis=("pod", "data"))
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Tuple, Union
 
 import jax
 import numpy as np
@@ -46,24 +59,34 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 class FedSharding:
     """Where the federation's client axis lives on the mesh.
 
-    mesh: any jax Mesh with an axis named ``axis`` (default ``'data'``);
-    the client/slot axis of every engine buffer is sharded over it, and
-    everything else (params, scalars) is replicated.
+    mesh: any jax Mesh with the axis (or axes) named by ``axis`` (default
+    ``'data'``; a tuple such as ``('pod', 'data')`` declares a composite
+    federation axis).  The client/slot axis of every engine buffer is
+    sharded over the named axes; scalars and small-model params are
+    replicated, while large-model params may stay sharded over the mesh's
+    remaining (e.g. ``'model'``) axes via per-leaf PartitionSpecs.
     """
     mesh: Mesh
-    axis: str = "data"
+    axis: Union[str, Tuple[str, ...]] = "data"
 
     def __post_init__(self):
-        if self.axis not in self.mesh.axis_names:
-            raise ValueError(
-                f"mesh has no {self.axis!r} axis (axes: "
-                f"{self.mesh.axis_names}); the federation axis must name "
-                f"an existing mesh axis")
+        for a in self.axes:
+            if a not in self.mesh.axis_names:
+                raise ValueError(
+                    f"mesh has no {a!r} axis (axes: "
+                    f"{self.mesh.axis_names}); every federation axis must "
+                    f"name an existing mesh axis")
 
     # -- geometry -------------------------------------------------------------
     @property
+    def axes(self) -> Tuple[str, ...]:
+        """The federation axis names as a tuple (composite-safe form)."""
+        return (self.axis,) if isinstance(self.axis, str) else \
+            tuple(self.axis)
+
+    @property
     def n_shards(self) -> int:
-        return int(self.mesh.shape[self.axis])
+        return int(np.prod([self.mesh.shape[a] for a in self.axes]))
 
     def pad_capacity(self, capacity: int) -> int:
         """Round capacity up so every shard owns the same number of whole
@@ -72,12 +95,17 @@ class FedSharding:
         return -(-capacity // n) * n
 
     # -- specs ----------------------------------------------------------------
+    def _entry(self):
+        """The PartitionSpec entry for the client dim: the bare name for a
+        single axis, the tuple for a composite one."""
+        return self.axis if isinstance(self.axis, str) else tuple(self.axis)
+
     def client_spec(self, ndim: int, axis_dim: int = 0) -> P:
         """PartitionSpec sharding dimension ``axis_dim`` over the
-        federation axis (the leading slot axis of engine buffers; plan
-        arrays carry the client axis at dim 1)."""
+        federation axis/axes (the leading slot axis of engine buffers;
+        plan arrays carry the client axis at dim 1)."""
         spec = [None] * ndim
-        spec[axis_dim] = self.axis
+        spec[axis_dim] = self._entry()
         return P(*spec)
 
     def client(self, ndim: int, axis_dim: int = 0) -> NamedSharding:
@@ -86,6 +114,17 @@ class FedSharding:
     def replicated(self) -> NamedSharding:
         return NamedSharding(self.mesh, P())
 
+    def param_sharding(self, spec: Optional[P]) -> NamedSharding:
+        """NamedSharding for a parameter leaf: ``spec=None`` replicates
+        (the small-model path); a PartitionSpec from the model's rule
+        table (``models.sharding.tree_param_specs``) keeps the leaf
+        sharded over the mesh's model/FSDP axes.  Axis names absent from
+        the mesh are dropped, so one spec serves every mesh shape."""
+        if spec is None:
+            return self.replicated()
+        from repro.models.sharding import _filter_spec
+        return NamedSharding(self.mesh, _filter_spec(spec, self.mesh))
+
     # -- placement (host -> device, commits the layout) -----------------------
     def put_client(self, x, axis_dim: int = 0):
         return jax.device_put(x, self.client(np.ndim(x), axis_dim))
@@ -93,6 +132,15 @@ class FedSharding:
     def put_replicated(self, tree):
         repl = self.replicated()
         return jax.tree.map(lambda l: jax.device_put(l, repl), tree)
+
+    def put_params(self, tree, specs=None):
+        """Place a parameter pytree: replicated when ``specs`` is None,
+        else per-leaf model-spec shardings (the large-model path)."""
+        if specs is None:
+            return self.put_replicated(tree)
+        return jax.tree.map(
+            lambda l, s: jax.device_put(l, self.param_sharding(s)),
+            tree, specs)
 
     # -- constraints (inside jit, steer GSPMD) --------------------------------
     def constrain_client(self, x, axis_dim: int = 0):
@@ -108,13 +156,24 @@ class FedSharding:
         return jax.tree.map(
             lambda l: jax.lax.with_sharding_constraint(l, repl), tree)
 
+    def constrain_params(self, tree, specs=None):
+        """Constrain a parameter pytree to its model specs (or replicated
+        when ``specs`` is None) — the in-jit counterpart of put_params."""
+        if specs is None:
+            return self.constrain_replicated(tree)
+        return jax.tree.map(
+            lambda l, s: jax.lax.with_sharding_constraint(
+                l, self.param_sharding(s)), tree, specs)
+
 
 def make_fed_sharding(n_devices: Optional[int] = None, *,
                       mesh: Optional[Mesh] = None,
-                      axis: str = "data") -> FedSharding:
+                      axis: Union[str, Tuple[str, ...]] = "data"
+                      ) -> FedSharding:
     """FedSharding over a fresh 1-D ``'data'`` mesh of local devices
     (n_devices=None uses all of them), or over an existing ``mesh`` that
-    already has the federation axis."""
+    already has the federation axis/axes (pass ``axis=('pod', 'data')``
+    for a composite multi-pod federation)."""
     if mesh is None:
         from repro.launch.mesh import make_data_mesh
         mesh = make_data_mesh(n_devices)

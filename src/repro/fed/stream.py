@@ -126,6 +126,7 @@ class StreamScheduler:
     def __init__(self, *, clients: Sequence[Client], init_params,
                  engine: Optional[RoundEngine] = None,
                  loss_fn: Optional[Callable] = None,
+                 task=None, engine_mode: str = "client_parallel",
                  eval_fn: Optional[Callable] = None,
                  capacity: Optional[int] = None,
                  max_samples: Optional[int] = None,
@@ -151,12 +152,13 @@ class StreamScheduler:
         self.clients: List[Client] = list(clients)
         if engine is None:
             engine = RoundEngine(
-                loss_fn=loss_fn, clients=self.clients,
+                loss_fn=loss_fn, task=task, clients=self.clients,
                 local_epochs=local_epochs, batch_size=batch_size,
                 scheme=scheme, eta0=eta0, chunk_size=chunk_size, agg=agg,
                 interpret=interpret, donate=donate,
                 with_metrics=with_metrics, capacity=capacity,
-                max_samples=max_samples, sharding=sharding)
+                max_samples=max_samples, sharding=sharding,
+                mode=engine_mode)
         self.engine = engine
         self.E = engine.E
         self.B = engine.B
@@ -247,12 +249,23 @@ class StreamScheduler:
         heapq.heappush(self.free_slots, slot)
 
     # -- event application ----------------------------------------------------
-    def _apply(self, e: ParticipationEvent, tau: int) -> str:
+    def _admit(self, slot: int, client: Client,
+               admits: Optional[list]) -> None:
+        """Stage a slot admission: coalesced into one admit_many burst at
+        the span boundary when a batch list is given (the scheduler
+        path), else written through immediately."""
+        if admits is None:
+            self.engine.admit(slot, client)
+        else:
+            admits.append((slot, client))
+
+    def _apply(self, e: ParticipationEvent, tau: int,
+               admits: Optional[list] = None) -> str:
         if isinstance(e, Arrival):
             if e.client is not None:
                 i = self._register(e.client)
                 slot = self._alloc_slot(i)
-                self.engine.admit(slot, e.client)
+                self._admit(slot, e.client, admits)
             else:
                 i = e.client_id
                 if i is None or not 0 <= i < len(self.clients):
@@ -260,7 +273,7 @@ class StreamScheduler:
                                      f"registered client_id, got {i!r}")
                 if i not in self.slot_of:
                     slot = self._alloc_slot(i)
-                    self.engine.admit(slot, self.clients[i])
+                    self._admit(slot, self.clients[i], admits)
             if i in self.objective:
                 if i not in self.departed:
                     return ""                   # duplicate arrival: no-op
@@ -322,10 +335,28 @@ class StreamScheduler:
 
     def _apply_events(self, tau: int) -> str:
         ev = ""
-        while self._queue and self._queue[0][0] <= tau:
-            _, _, e = heapq.heappop(self._queue)
-            ev += self._apply(e, tau)
-            self.events_applied += 1
+        # an arrival burst coalesces into one fused admit_many: slot
+        # writes are deferred while consecutive Arrivals pop, and flushed
+        # before any event type that may read or free a slot
+        admits: List = []
+
+        def flush():
+            if admits:
+                self.engine.admit_many(admits)
+                admits.clear()
+
+        try:
+            while self._queue and self._queue[0][0] <= tau:
+                _, _, e = heapq.heappop(self._queue)
+                if not isinstance(e, Arrival):
+                    flush()
+                ev += self._apply(e, tau, admits)
+                self.events_applied += 1
+        finally:
+            # a raising event must not strand staged admissions: slot
+            # bookkeeping already recorded them, so the engine writes
+            # have to land even on the error path
+            flush()
         if tau in self._expiry_taus:
             self._expiry_taus.discard(tau)
             self._dirty = True                  # masked cohort resumes

@@ -131,39 +131,50 @@ def weighted_agg(coeffs, deltas, *, block: int = DEFAULT_BLOCK,
     return out[0, :D]
 
 
-def _local_agg_psum(coeffs, deltas, *, axis, block, interpret, k_block):
+def _local_agg_psum(coeffs, deltas, *, axes, block, interpret, k_block):
     """Per-shard body: reduce the local client slab with one (possibly
     K-tiled) launch, then all-reduce partial sums across the mesh."""
     out = weighted_agg(coeffs, deltas, block=block, interpret=interpret,
                        k_block=k_block)
-    return jax.lax.psum(out, axis)
+    return jax.lax.psum(out, axes)
 
 
-def weighted_agg_sharded(coeffs, deltas, *, mesh, axis: str = "data",
+def weighted_agg_sharded(coeffs, deltas, *, mesh, axis="data",
                          block: int = DEFAULT_BLOCK,
                          interpret: bool | None = None,
                          k_block: int | None = None):
     """Cross-device weighted_agg: coeffs (K,) and deltas (K, D) sharded
-    over ``axis`` of ``mesh`` on the client dim -> (D,) f32, replicated.
+    over ``axis`` of ``mesh`` on the client dim -> (D,) f32, replicated
+    over the federation axes.
 
-    Each device makes one local launch over its (K / n_shards, D) slab —
-    the same single-block/K-tiled layout choice as weighted_agg, applied
-    to the local K — followed by a ``psum`` epilogue over ``axis``: the
-    flat delta reduction produces replicated global params with a single
-    all-reduce and no host round-trip.  K must divide evenly over the
-    mesh axis (the engine pads capacity so it always does).
+    ``axis`` names the federation axis — a single mesh axis (``'data'``)
+    or a tuple of axes (``('pod', 'data')``) for composite multi-pod
+    federations; the client dim then shards over their product.  Each
+    device makes one local launch over its (K / n_shards, D) slab — the
+    same single-block/K-tiled layout choice as weighted_agg, applied to
+    the local K — followed by a ``psum`` epilogue over exactly the
+    federation axes: the flat delta reduction produces global params with
+    a single all-reduce and no host round-trip.  Mesh axes *not* named
+    (e.g. ``'model'``) are untouched — each of their shard groups runs
+    the same reduction, so downstream code may constrain the result back
+    to a model-sharded layout.  K must divide evenly over the federation
+    axes (the engine pads capacity so it always does).
     """
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
     K = deltas.shape[0]
-    n = mesh.shape[axis]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
     if K % n:
         raise ValueError(
-            f"client axis {K} not divisible by mesh axis {axis!r}={n}; "
+            f"client axis {K} not divisible by mesh axes {axes!r}={n}; "
             f"pad the client axis (FedSharding.pad_capacity)")
+    entry = axes[0] if len(axes) == 1 else axes
     local = functools.partial(
-        _local_agg_psum, axis=axis, block=block,
+        _local_agg_psum, axes=axes, block=block,
         interpret=resolve_interpret(interpret), k_block=k_block)
     # check_rep=False: shard_map has no replication rule for pallas_call
     fn = shard_map(local, mesh=mesh,
-                   in_specs=(P(axis), P(axis, None)),
+                   in_specs=(P(entry), P(entry, None)),
                    out_specs=P(), check_rep=False)
     return fn(coeffs, deltas)

@@ -1,0 +1,174 @@
+"""Federate an assigned architecture through the device-resident engine.
+
+Unlike ``repro.launch.train`` (the seed host loop re-sampling batches in
+numpy every round), this CLI drives the full production path: an LMTask
+(fed/task.py) puts per-client token streams on device once, the
+RoundEngine runs multi-round spans with on-device participation sampling,
+and a StreamScheduler admits mid-training arrivals into capacity slots —
+the same machinery the logreg workload uses, now over the model zoo.
+
+  PYTHONPATH=src python -m repro.launch.fed_train --arch mamba2-130m \
+      --rounds 8 --clients 4 --mode client_sequential
+
+Composite (data x model) meshes shard the federation axis over 'data'
+(add 'pod' via --pod for multi-pod federations) while each client's local
+epochs run model-parallel over 'model' — params stay sharded per the
+model's partition specs in client_sequential mode:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.fed_train --arch mamba2-130m \
+      --data 2 --model 2 --mode client_sequential
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def build_fleet(task, *, n_clients: int, samples: int, seed: int,
+                n_domains: int = 4):
+    """Seeded non-IID client fleet: Zipf token streams per domain, Table-2
+    availability traces round-robin."""
+    import numpy as np
+
+    from repro.core.participation import TRACES
+    from repro.fed import Client
+
+    rng = np.random.default_rng(seed)
+    return [Client(x=task.token_stream(rng, n=samples, domain=i % n_domains),
+                   trace=TRACES[i % len(TRACES)])
+            for i in range(n_clients)]
+
+
+def main(argv=None) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs import ARCH_IDS, get_config
+    from repro.fed import Arrival, FedSharding, LMTask, StreamScheduler
+    from repro.models.params import param_count
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="mamba2-130m", choices=ARCH_IDS)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="engine capacity slots (default: clients + 2)")
+    ap.add_argument("--samples", type=int, default=24,
+                    help="sequences per client")
+    ap.add_argument("--local-epochs", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--scheme", default="C", choices=list("ABC"))
+    ap.add_argument("--eta0", type=float, default=0.05)
+    ap.add_argument("--mode", default=None,
+                    choices=["client_parallel", "client_sequential"],
+                    help="engine execution mode (default: the arch "
+                         "config's fed.mode)")
+    ap.add_argument("--agg", default="auto", choices=["auto", "tree", "flat"])
+    ap.add_argument("--chunk-size", type=int, default=8)
+    ap.add_argument("--eval-every", type=int, default=4)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (needs a real accelerator)")
+    ap.add_argument("--data", type=int, default=0,
+                    help="mesh 'data' (federation) axis size; 0 = no mesh")
+    ap.add_argument("--model", type=int, default=1,
+                    help="mesh 'model' (TP/FSDP) axis size")
+    ap.add_argument("--pod", type=int, default=0,
+                    help="leading 'pod' axis size for a composite "
+                         "(pod x data) federation; 0 = no pod axis")
+    ap.add_argument("--arrive", type=int, default=0,
+                    help="admit this many brand-new clients mid-run "
+                         "(streaming arrivals at round rounds//2)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    mode = args.mode or cfg.fed.mode
+
+    sharding = None
+    if not args.data and (args.model > 1 or args.pod):
+        ap.error("--model/--pod need --data (the mesh is built only for "
+                 "a nonzero federation axis); e.g. --data 1 --model 2")
+    if args.data:
+        if args.pod:
+            mesh = jax.make_mesh((args.pod, args.data, args.model),
+                                 ("pod", "data", "model"))
+            axis = ("pod", "data")
+        else:
+            mesh = jax.make_mesh((args.data, args.model),
+                                 ("data", "model"))
+            axis = "data"
+        sharding = FedSharding(mesh=mesh, axis=axis)
+
+    task = LMTask(cfg, seq_len=args.seq, fsdp=(mode == "client_sequential"))
+    clients = build_fleet(task, n_clients=args.clients,
+                          samples=args.samples, seed=args.seed)
+    params = task.init_params(jax.random.PRNGKey(args.seed))
+    n_params = param_count(params)
+
+    # probe loss: one fixed held-out batch from every founding domain
+    import numpy as np
+    probe_rng = np.random.default_rng(args.seed + 1)
+    probe = task.make_batch(
+        {"tokens": task.token_stream(probe_rng, n=4, domain=0)})
+    probe_loss = jax.jit(task.loss_fn)
+
+    def evaluate(p):
+        return float(probe_loss(p, probe)), float("nan")
+
+    events = []
+    if args.arrive:
+        fresh = build_fleet(task, n_clients=args.arrive,
+                            samples=args.samples, seed=args.seed + 999)
+        events = [Arrival(max(1, args.rounds // 2), client=c)
+                  for c in fresh]
+
+    capacity = args.capacity
+    if capacity is None:
+        capacity = args.clients + max(2, args.arrive)
+    sch = StreamScheduler(
+        clients=clients, init_params=params, task=task,
+        engine_mode=mode, capacity=capacity, max_samples=args.samples,
+        local_epochs=args.local_epochs, batch_size=args.batch,
+        scheme=args.scheme, eta0=args.eta0, chunk_size=args.chunk_size,
+        agg=args.agg, sharding=sharding, seed=args.seed, mode="device",
+        evaluate=evaluate, events=events)
+
+    if not args.quiet:
+        mesh_desc = (dict(sharding.mesh.shape) if sharding is not None
+                     else "single-device")
+        print(f"arch={cfg.name} params={n_params:,} mode={mode} "
+              f"scheme={args.scheme} C={args.clients} "
+              f"E={args.local_epochs} B={args.batch} S={args.seq} "
+              f"capacity={sch.engine.capacity} mesh={mesh_desc}")
+
+    t0 = time.perf_counter()
+    sch.run(args.rounds, eval_every=args.eval_every)
+    wall = time.perf_counter() - t0
+
+    evals = [(h.tau, h.loss, h.event) for h in sch.history
+             if h.event or h.loss == h.loss]
+    if not args.quiet:
+        print("tau,probe_loss,event")
+        for tau, loss, ev in evals:
+            print(f"{tau},{loss:.4f},{ev}")
+        print(f"rounds,{args.rounds}")
+        print(f"wall_s,{wall:.2f}")
+        print(f"rounds_per_sec,{args.rounds / wall:.3f}")
+
+    losses = [l for _, l, _ in evals if l == l]
+    return {"arch": cfg.name, "mode": mode, "params": n_params,
+            "rounds": args.rounds, "wall_s": round(wall, 3),
+            "rounds_per_sec": round(args.rounds / wall, 3),
+            "final_loss": losses[-1] if losses else float("nan"),
+            "capacity": sch.engine.capacity,
+            "events_applied": sch.events_applied}
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

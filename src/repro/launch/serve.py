@@ -18,7 +18,7 @@ from repro.models import transformer
 from repro.models.params import init_params, param_count
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-130m")
     ap.add_argument("--batch", type=int, default=4)
@@ -27,7 +27,7 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if not args.full:

@@ -7,7 +7,6 @@ For each (arch x input shape) this module produces:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -108,8 +107,11 @@ def make_train_step(cfg: ArchConfig, shape: InputShape, mesh) -> StepBundle:
             (C, E, b, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
         batch_shard["patch_emb"] = P(client_axes, None, bdim_axes, None, None)
 
-    loss_fn = functools.partial(_arch_loss, cfg)
-    round_fn = make_fed_round(loss_fn, fed.mode)
+    # the same ClientTask the federation engine uses (fed/task.py): the
+    # dry-run train step and a live federated round share one loss path
+    from repro.fed.task import LMTask
+    task = LMTask(cfg, seq_len=S_text, fsdp=not parallel)
+    round_fn = make_fed_round(task.loss_fn, fed.mode)
 
     def step(params, batches, alpha, coeffs, eta):
         return round_fn(params, batches, alpha, coeffs, eta)
@@ -135,10 +137,6 @@ def make_train_step(cfg: ArchConfig, shape: InputShape, mesh) -> StepBundle:
     return StepBundle(step, input_specs, in_shardings, out_shardings,
                       meta={"clients": C, "local_epochs": E,
                             "client_batch": b, "mode": fed.mode})
-
-
-def _arch_loss(cfg, params, batch):
-    return transformer.train_loss(params, cfg, batch)
 
 
 # ---------------------------------------------------------------------------

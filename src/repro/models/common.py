@@ -87,6 +87,30 @@ def mlp_apply(p, x, cfg):
     return y
 
 
+def safe_concat(parts, axis: int):
+    """Concatenate via dynamic-update-slices instead of a concatenate op.
+
+    The GSPMD partitioner on this jax/XLA version miscompiles
+    ``concatenate`` when the operands carry different shardings and the
+    concatenated dim's shard boundary does not align with the piece
+    boundaries (observed: a 'model'-sharded (…, 512) next to replicated
+    (…, 16) pieces returns wrong *values*, max abs err ~4.5 on unit-scale
+    inputs).  Writing each piece into a zeros buffer with
+    dynamic_update_slice partitions correctly, and XLA fuses it back into
+    a copy — same cost, correct data movement."""
+    axis = axis % parts[0].ndim
+    total = sum(p.shape[axis] for p in parts)
+    shape = list(parts[0].shape)
+    shape[axis] = total
+    out = jnp.zeros(shape, parts[0].dtype)
+    off = 0
+    for p in parts:
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, p.astype(out.dtype), off, axis)
+        off += p.shape[axis]
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Initialization helpers
 # ---------------------------------------------------------------------------

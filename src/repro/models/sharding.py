@@ -47,7 +47,12 @@ def constrain(x, spec: P):
 
 
 def _filter_spec(spec: P, mesh: Mesh) -> P:
-    """Drop axis names not present in the mesh (e.g. 'pod' on single-pod)."""
+    """Drop axis names not present in the mesh (e.g. 'pod' on single-pod).
+
+    Singleton tuples normalize to the bare axis name: ``('data',)`` and
+    ``'data'`` describe the same layout but compare unequal in the jit
+    cache key, so a committed array round-tripping through GSPMD (which
+    emits the bare form) would otherwise recompile every consumer."""
     names = set(mesh.axis_names)
 
     def keep(entry):
@@ -55,7 +60,9 @@ def _filter_spec(spec: P, mesh: Mesh) -> P:
             return None
         if isinstance(entry, (tuple, list)):
             kept = tuple(a for a in entry if a in names)
-            return kept if kept else None
+            if not kept:
+                return None
+            return kept[0] if len(kept) == 1 else kept
         return entry if entry in names else None
 
     return P(*(keep(e) for e in spec))

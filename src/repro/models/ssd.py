@@ -7,7 +7,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import rmsnorm
+from repro.models.common import rmsnorm, safe_concat
 
 
 def segsum(x):
@@ -129,8 +129,11 @@ def mamba_mixer(p, u, cfg, cache=None, decode=False):
     K = cfg.ssm_d_conv
 
     z = u @ p["in_z"]
-    xBC = jnp.concatenate([u @ p["in_x"], u @ p["in_B"], u @ p["in_C"]],
-                          axis=-1)
+    # safe_concat: in_x's output dim is 'model'-sharded while in_B/in_C
+    # stay replicated — a raw concatenate miscompiles under GSPMD here
+    # (misaligned shard/piece boundaries; see models/common.safe_concat)
+    xBC = safe_concat([u @ p["in_x"], u @ p["in_B"], u @ p["in_C"]],
+                      axis=-1)
     dt = jax.nn.softplus((u @ p["in_dt"]).astype(jnp.float32)
                          + p["dt_bias"].astype(jnp.float32))
     A = -jnp.exp(p["A_log"].astype(jnp.float32))

@@ -1,0 +1,152 @@
+"""Subprocess body for tests/test_fedmodel.py (the large-model federation
+path under a real multi-device mesh) — same harness pattern as
+tests/_sharded_check.py: XLA_FLAGS must virtualize devices before jax
+initializes, so these checks run in a fresh interpreter and report a
+``RESULT {json}`` line on success.
+
+Checks:
+  1. composite federation axes: a (pod x data) logreg federation matches
+     the unsharded engine round-for-round in plan mode (capacity padded
+     over the axis product);
+  2. LM plan parity: a reduced mamba2-130m federation on a (data x model)
+     mesh matches the unsharded run, in BOTH execution modes, with params
+     staying sharded per the model spec in client_sequential;
+  3. zero-recompile churn: a brand-new LM client admitted mid-training
+     costs slot writes only — no new compiled chunk entries.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import json  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.configs.paper import SYNTHETIC_LR  # noqa: E402
+from repro.core.participation import TRACES  # noqa: E402
+from repro.data import synthetic_federation  # noqa: E402
+from repro.fed import (Client, FedSharding, LMTask,  # noqa: E402
+                       RoundEngine)
+from repro.launch.fed_train import build_fleet  # noqa: E402
+from repro.models.small import init_small, make_loss_fn  # noqa: E402
+
+RESULTS = {}
+SEQ, SAMPLES, E, B = 32, 12, 2, 2
+
+
+def _span_kwargs(cap, n_active):
+    p = np.zeros(cap)
+    p[:n_active] = 1.0 / n_active
+    return dict(p=p, active=(p > 0).astype(np.float32), lr_shift_tau=0,
+                reboot_tau0=np.zeros(cap, np.int32),
+                reboot_boost=np.ones(cap, np.float32))
+
+
+def _maxdiff(a, b):
+    return max(float(np.abs(np.asarray(x, np.float32)
+                            - np.asarray(y, np.float32)).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def check_composite_axes():
+    mesh = jax.make_mesh((2, 2), ("pod", "data"))
+    fs = FedSharding(mesh=mesh, axis=("pod", "data"))
+    assert fs.n_shards == 4
+    train, _ = synthetic_federation(0.5, 0.5, 6, seed=0)
+    rng = np.random.default_rng(0)
+    clients = [Client(x=tr[0], y=tr[1], trace=TRACES[rng.integers(0, 5)])
+               for tr in train]
+    params = init_small(jax.random.PRNGKey(0), SYNTHETIC_LR)
+    outs = {}
+    for tag, sh in (("composite", fs), ("single", None)):
+        eng = RoundEngine(loss_fn=make_loss_fn(SYNTHETIC_LR),
+                          clients=clients, local_epochs=3, batch_size=4,
+                          sharding=sh)
+        cap = eng.capacity
+        if sh is not None:
+            assert cap == 8, cap           # 6 clients pad to 2 whole
+        alphas = np.ones((3, cap, 3), np.float32)
+        idxs = np.random.default_rng(1).integers(
+            0, 20, size=(3, 8, 3, 4))[:, :cap]
+        outs[tag], _ = eng.run_span(params, 0, 3,
+                                    plan=(alphas, idxs),
+                                    **_span_kwargs(cap, 6))
+    err = _maxdiff(outs["composite"], outs["single"])
+    RESULTS["composite_pod_data_err"] = err
+    assert err < 1e-5, f"composite (pod,data) diverges: {err}"
+
+
+def check_lm_plan_parity():
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    fs = FedSharding(mesh=mesh, axis="data")
+    cfg = get_config("mamba2-130m").reduced()
+    rng = np.random.default_rng(0)
+    plan = (np.ones((2, 4, E), np.float32),
+            rng.integers(0, SAMPLES, size=(2, 4, E, B)))
+    for mode in ("client_parallel", "client_sequential"):
+        outs = {}
+        for tag, sh in (("sharded", fs), ("single", None)):
+            task = LMTask(cfg, seq_len=SEQ,
+                          fsdp=(mode == "client_sequential"))
+            clients = build_fleet(task, n_clients=4, samples=SAMPLES,
+                                  seed=0)
+            eng = RoundEngine(task=task, clients=clients, local_epochs=E,
+                              batch_size=B, eta0=0.1, mode=mode,
+                              sharding=sh)
+            params = task.init_params(jax.random.PRNGKey(0))
+            out, _ = eng.run_span(params, 0, 2, plan=plan,
+                                  **_span_kwargs(eng.capacity, 4))
+            outs[tag] = out
+            if sh is not None and mode == "client_sequential":
+                # the >=30B contract: params never replicate — FSDP x TP
+                # specs survive the round
+                specs = {str(l.sharding.spec)
+                         for l in jax.tree.leaves(out)}
+                assert any("data" in s for s in specs), specs
+                assert any("model" in s for s in specs), specs
+        err = _maxdiff(outs["sharded"], outs["single"])
+        RESULTS[f"lm_plan_parity_err_{mode}"] = err
+        assert err < 1e-5, f"{mode} sharded diverges: {err}"
+
+
+def check_lm_zero_recompile_churn():
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    fs = FedSharding(mesh=mesh, axis="data")
+    cfg = get_config("mamba2-130m").reduced()
+    task = LMTask(cfg, seq_len=SEQ, fsdp=True)
+    clients = build_fleet(task, n_clients=3, samples=SAMPLES, seed=0)
+    eng = RoundEngine(task=task, clients=clients, local_epochs=E,
+                      batch_size=B, eta0=0.05, mode="client_sequential",
+                      chunk_size=2, capacity=6, sharding=fs)
+    params = task.init_params(jax.random.PRNGKey(0))
+    kw = _span_kwargs(eng.capacity, 3)
+    params, _ = eng.run_span(params, 0, 3, key=jax.random.PRNGKey(1),
+                             **kw)                  # warm chunks {1, 2}
+    sizes = {k: f._cache_size() for k, f in eng._fns.items()}
+    assert sizes, "expected compiled chunk fns"
+    fresh = build_fleet(task, n_clients=2, samples=SAMPLES, seed=99)
+    eng.admit_many([(3, fresh[0]), (4, fresh[1])])  # burst admit
+    kw = _span_kwargs(eng.capacity, 5)
+    params, _ = eng.run_span(params, 3, 3, key=jax.random.PRNGKey(2),
+                             **kw)
+    for k, f in eng._fns.items():
+        assert k in sizes and f._cache_size() == sizes[k], \
+            f"chunk {k} recompiled after churn"
+    RESULTS["lm_recompiles_across_churn"] = 0
+
+
+def main():
+    n_dev = len(jax.devices())
+    assert n_dev == 4, f"expected 4 virtual devices, got {n_dev}"
+    check_composite_axes()
+    check_lm_plan_parity()
+    check_lm_zero_recompile_churn()
+    RESULTS["n_devices"] = n_dev
+    print("RESULT " + json.dumps(RESULTS))
+
+
+if __name__ == "__main__":
+    main()

@@ -208,6 +208,74 @@ def test_run_span_zero_rounds():
         assert m["delta_norm"].shape == (0,)
 
 
+def test_sequential_mode_matches_parallel_same_seeds():
+    """client_sequential streams deltas into one accumulator instead of
+    vmapping the client axis; with the same device-mode key (identical
+    sampling) the two modes implement the same Eq. (2) round — params
+    agree to f32 reassociation tolerance over a multi-chunk span."""
+    clients = make_clients(6)
+    params = init_small(jax.random.PRNGKey(0), CFG)
+    outs, mets = {}, {}
+    for mode in ("client_parallel", "client_sequential"):
+        eng = RoundEngine(loss_fn=make_loss_fn(CFG), clients=make_clients(6),
+                          local_epochs=5, batch_size=10, scheme="C",
+                          eta0=1.0, chunk_size=4, mode=mode,
+                          with_metrics=True)
+        cap = eng.capacity
+        p = np.array([c.n for c in clients], np.float64)
+        p = p / p.sum()
+        outs[mode], mets[mode] = eng.run_span(
+            params, 0, 10, p=p, active=np.ones(cap, np.float32),
+            lr_shift_tau=0, reboot_tau0=np.zeros(cap, np.int32),
+            reboot_boost=np.ones(cap, np.float32),
+            key=jax.random.PRNGKey(7))
+    # identical on-device sampling stream...
+    np.testing.assert_array_equal(mets["client_parallel"]["s"],
+                                  mets["client_sequential"]["s"])
+    # ...and matching trajectories + delta norms
+    assert_params_close(outs["client_parallel"], outs["client_sequential"],
+                        rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(mets["client_parallel"]["delta_norm"],
+                               mets["client_sequential"]["delta_norm"],
+                               rtol=1e-4)
+
+
+def test_engine_rejects_bad_mode_and_double_task():
+    clients = make_clients(2)
+    with pytest.raises(ValueError, match="client_parallel"):
+        RoundEngine(loss_fn=make_loss_fn(CFG), clients=clients,
+                    local_epochs=2, batch_size=5, mode="bogus")
+    from repro.fed.task import ArrayTask
+    task = ArrayTask(make_loss_fn(CFG), clients[0].x.shape[1:])
+    with pytest.raises(ValueError, match="exactly one"):
+        RoundEngine(loss_fn=make_loss_fn(CFG), task=task, clients=clients,
+                    local_epochs=2, batch_size=5)
+
+
+def test_admit_many_matches_single_admits():
+    """One fused admit_many burst stages the same slot state as the
+    equivalent sequence of single admits (including pow2 padding that
+    repeats the last row)."""
+    clients = make_clients(4)
+    fresh = make_clients(3, seed=77)
+    engs = []
+    for _ in range(2):
+        engs.append(RoundEngine(loss_fn=make_loss_fn(CFG),
+                                clients=make_clients(4), local_epochs=5,
+                                batch_size=10, capacity=8,
+                                max_samples=max(c.n for c in fresh)))
+    engs[0].admit_many([(4, fresh[0]), (5, fresh[1]), (6, fresh[2])])
+    for slot, c in [(4, fresh[0]), (5, fresh[1]), (6, fresh[2])]:
+        engs[1].admit(slot, c)
+    for name in engs[0].data:
+        np.testing.assert_array_equal(np.asarray(engs[0].data[name]),
+                                      np.asarray(engs[1].data[name]))
+    np.testing.assert_array_equal(np.asarray(engs[0].n),
+                                  np.asarray(engs[1].n))
+    np.testing.assert_array_equal(np.asarray(engs[0].s_cdf),
+                                  np.asarray(engs[1].s_cdf))
+
+
 def test_trainer_plumbs_engine_options():
     """Satellite: interpret/donate/with_metrics reach the RoundEngine the
     trainer constructs (they were silently dropped before)."""

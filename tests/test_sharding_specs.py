@@ -70,6 +70,67 @@ def test_cache_specs_divisible(arch, shape_name):
     _check_divisible(specs, cache, f"{arch} {shape_name}")
 
 
+def test_composite_fed_axis_specs():
+    """Composite federation axes: the client dim shards over the product
+    of the named axes with a tuple PartitionSpec entry."""
+    import jax
+    from repro.fed.sharding import FedSharding
+
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    fs = FedSharding(mesh=mesh, axis=("pod", "data"))
+    assert fs.axes == ("pod", "data")
+    assert fs.client_spec(2) == P(("pod", "data"), None)
+    assert fs.client_spec(4, axis_dim=1) == P(None, ("pod", "data"),
+                                              None, None)
+    # single-axis spec entry stays a bare name (layout-identical to PR 3)
+    fs1 = FedSharding(mesh=mesh, axis="data")
+    assert fs1.client_spec(2) == P("data", None)
+
+
+def test_composite_fed_axis_padding_ownership():
+    """pad_capacity rounds to whole slots per shard over the *product* of
+    the federation axes, and padding is idempotent."""
+    import jax
+    from repro.fed.sharding import FedSharding
+
+    mesh = jax.make_mesh((1, 1), ("pod", "data"))
+
+    class SixShards(FedSharding):
+        n_shards = 6                      # pod=2 x data=3 geometry
+
+    fs = SixShards(mesh=mesh, axis=("pod", "data"))
+    assert [fs.pad_capacity(c) for c in (1, 5, 6, 7, 12, 13)] == \
+        [6, 6, 6, 12, 12, 18]
+    for c in (1, 5, 6, 7, 12, 13):
+        assert fs.pad_capacity(fs.pad_capacity(c)) == fs.pad_capacity(c)
+        assert fs.pad_capacity(c) % fs.n_shards == 0
+
+
+def test_composite_fed_axis_validation():
+    """Every named federation axis must exist on the mesh."""
+    import jax
+    import pytest as _pytest
+    from repro.fed.sharding import FedSharding
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with _pytest.raises(ValueError, match="no 'pod' axis"):
+        FedSharding(mesh=mesh, axis=("pod", "data"))
+
+
+def test_fed_param_sharding_filters_missing_axes():
+    """param_sharding drops spec axes the mesh lacks, so one model rule
+    table serves every mesh shape (pod entries vanish on single-pod)."""
+    import jax
+    from repro.fed.sharding import FedSharding
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    fs = FedSharding(mesh=mesh, axis="data")
+    ns = fs.param_sharding(P(("pod", "data"), "model"))
+    # singleton tuple normalizes to the bare name (cache-key-stable form)
+    assert ns.spec == P("data", "model")
+    assert fs.param_sharding(None).spec == P()
+
+
 def test_param_bytes_within_hbm():
     """Per-device param bytes must fit v5e HBM (16 GB) for serving."""
     from repro.launch.steps import param_bytes, serve_fsdp

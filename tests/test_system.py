@@ -46,6 +46,27 @@ def test_dryrun_sets_device_count_before_imports():
     assert "xla_force_host_platform_device_count=512" in head[1]
 
 
+def test_serving_paths_run_reduced():
+    """Drift gate for the serving substrate: both serving drivers
+    (repro.launch.serve and examples/serve_batched) must keep running a
+    ``cfg.reduced()`` model end-to-end while the model layer is
+    refactored — prefill + a couple of decode steps each."""
+    import importlib.util
+
+    from repro.launch import serve as serve_cli
+    serve_cli.main(["--arch", "mamba2-130m", "--batch", "2",
+                    "--prompt-len", "8", "--gen", "2"])
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    spec = importlib.util.spec_from_file_location(
+        "serve_batched", os.path.join(root, "examples", "serve_batched.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    n, t_prefill, t_decode = mod.serve(
+        get_config("starcoder2-3b").reduced(), batch=2, prompt_len=8, gen=2)
+    assert n > 0 and t_prefill > 0 and t_decode > 0
+
+
 def test_exact_arch_dimensions():
     """Spot-check assigned dims against the brief."""
     c = get_config("deepseek-v3-671b")
