@@ -34,6 +34,8 @@ def main() -> None:
                     help="skip the rounds/sec engine benchmark")
     ap.add_argument("--skip-stream", action="store_true",
                     help="skip the streaming-participation benchmark")
+    ap.add_argument("--skip-service", action="store_true",
+                    help="skip the concurrent-ingestion service benchmark")
     ap.add_argument("--skip-sharded", action="store_true",
                     help="skip the sharded-vs-single engine benchmark")
     ap.add_argument("--skip-fedmodel", action="store_true",
@@ -117,6 +119,17 @@ def main() -> None:
         print(f"admit_us,{res['admit_us']}")
         print(f"evict_us,{res['evict_us']}")
         print(f"# wrote {args.stream_json}")
+        sys.stdout.flush()
+
+    if not args.skip_service:
+        from benchmarks.service_bench import main as service_main
+        res = service_main(args.stream_json)
+        print("\n# service: metric,value")
+        for k in ("ingest_events_per_sec", "rounds_per_sec_under_traffic",
+                  "rounds_per_sec_blocking", "service_overhead_fraction",
+                  "snapshot_ms", "snapshot_to_disk_ms"):
+            print(f"{k},{res[k]}")
+        print(f"# merged into {args.stream_json}")
         sys.stdout.flush()
 
     if not args.skip_tables:

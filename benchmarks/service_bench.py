@@ -1,0 +1,188 @@
+"""FederationService benchmark: concurrent-ingestion throughput and
+snapshot latency while spans run.
+
+Three costs matter for the live-serving layer (fed/service.py):
+
+  * ingestion throughput — events/sec a producer thread can submit into
+    the bounded inbox WHILE the worker thread runs training spans (the
+    serve.py-gap workload: membership traffic concurrent with compute);
+  * rounds/sec under that concurrent traffic, vs the same scheduler
+    driven by blocking run() calls with no service in front — the
+    lock/queue overhead of the service layer itself;
+  * snapshot latency — pause at a span boundary, serialize the full
+    FedState (queue + membership + RNG/key), resume: the cost of a
+    mid-stream checkpoint a production deployment takes periodically.
+
+Merged into BENCH_stream.json (under "service") so the streaming perf
+trajectory stays in one machine-readable file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core.participation import TRACES
+from repro.fed.scenarios import _make_clients, build_scheduler, make_scenario
+from repro.fed.service import FederationService
+from repro.fed.stream import InactivityBurst, TraceShift
+
+NO_EVAL = 10 ** 9
+
+
+def _fresh_scheduler(seed=0, mode="device", chunk=8):
+    sc = make_scenario("flash-crowd", seed=seed)
+    sch = build_scheduler(sc, mode=mode, chunk_size=chunk)
+    sch._queue.clear()                    # event-free fleet; we drive traffic
+    return sch
+
+
+def _warm_chunks(sch, chunk=8):
+    """Compile every pow2 chunk length once (event boundaries split spans
+    into arbitrary pow2 pieces, and a mid-measurement compile would
+    swamp the numbers)."""
+    r = 1
+    while r <= chunk:
+        sch.run(r, eval_every=NO_EVAL)
+        r *= 2
+
+
+def _traffic(j: int, n_clients: int):
+    """Steady-state control traffic: trace shifts and short bursts (slot-
+    balance-neutral, so the stream can run indefinitely)."""
+    if j % 5 == 4:
+        return InactivityBurst(0, 1, (j % n_clients,))
+    return TraceShift(0, client_id=j % n_clients, trace=TRACES[j % 8])
+
+
+def bench_ingestion(n_events=400, span_rounds=4, seed=0):
+    """Submit n_events from a producer thread while the worker trains;
+    returns (events_per_sec_ingested, rounds_per_sec_under_traffic)."""
+    sch = _fresh_scheduler(seed)
+    n_clients = len(sch.clients)
+    _warm_chunks(sch)
+    svc = FederationService(sch, span_rounds=span_rounds,
+                            eval_every=NO_EVAL, max_rounds=None,
+                            max_pending=128)
+    done = threading.Event()
+    submitted_wall = [0.0]
+
+    def producer():
+        t0 = time.perf_counter()
+        for j in range(n_events):
+            svc.submit(_traffic(j, n_clients))
+        svc.drain(timeout=120)
+        submitted_wall[0] = time.perf_counter() - t0
+        done.set()
+
+    rounds0 = sch._next_tau
+    t0 = time.perf_counter()
+    with svc:
+        t = threading.Thread(target=producer)
+        t.start()
+        done.wait(timeout=180)
+        t.join()
+        wall = time.perf_counter() - t0
+        rounds = sch._next_tau - rounds0
+    ev_per_sec = n_events / submitted_wall[0]
+    rps = rounds / wall if wall > 0 else float("nan")
+    return ev_per_sec, rps, svc.stats()
+
+
+def bench_baseline_rps(span=24, reps=3, seed=0):
+    """The same scheduler driven by blocking run() calls, no service."""
+    sch = _fresh_scheduler(seed)
+    sch.run(span, eval_every=NO_EVAL)     # warmup
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        sch.run(span, eval_every=NO_EVAL)
+        best = min(best, time.perf_counter() - t0)
+    return span / best
+
+
+def bench_service_rps(rounds=96, span_rounds=8, seed=0):
+    """Event-free rounds/sec THROUGH the service (worker thread + lock +
+    inbox polling, zero traffic) — against bench_baseline_rps this
+    isolates the service layer's own overhead."""
+    sch = _fresh_scheduler(seed)
+    _warm_chunks(sch)
+    base = sch._next_tau
+    svc = FederationService(sch, span_rounds=span_rounds,
+                            eval_every=NO_EVAL, max_rounds=base + rounds)
+    t0 = time.perf_counter()
+    with svc:
+        ok = svc.wait_rounds(base + rounds, timeout=300)
+    wall = time.perf_counter() - t0
+    return rounds / wall if ok else float("nan")
+
+
+def bench_snapshot(tmpdir=None, iters=5, seed=0):
+    """Latency of a span-boundary-consistent snapshot, in-memory (state
+    dict only) and persisted (full resumable checkpoint)."""
+    sch = _fresh_scheduler(seed)
+    _warm_chunks(sch)
+    sch.push(*make_scenario("flash-crowd", seed=seed).events)  # real queue
+    svc = FederationService(sch, span_rounds=4, eval_every=NO_EVAL,
+                            max_rounds=None)
+    with svc:
+        svc.snapshot()                    # warmup (span compiles settle)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            svc.snapshot()
+        mem_ms = (time.perf_counter() - t0) / iters * 1e3
+        disk_ms = float("nan")
+        if tmpdir is not None:
+            svc.snapshot(os.path.join(tmpdir, "bench_ckpt"))
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                svc.snapshot(os.path.join(tmpdir, "bench_ckpt"))
+            disk_ms = (time.perf_counter() - t0) / iters * 1e3
+    return mem_ms, disk_ms
+
+
+def run(n_events=400, seed=0):
+    import tempfile
+    ev_per_sec, rps_traffic, stats = bench_ingestion(n_events, seed=seed)
+    rps_blocking = bench_baseline_rps(seed=seed)
+    rps_service = bench_service_rps(seed=seed)
+    with tempfile.TemporaryDirectory() as td:
+        snap_mem_ms, snap_disk_ms = bench_snapshot(td, seed=seed)
+    return {
+        "config": {"n_events": n_events, "span_rounds": 4,
+                   "scenario": "flash-crowd",
+                   "backend": jax.default_backend()},
+        "ingest_events_per_sec": round(ev_per_sec, 1),
+        # every-boundary event traffic splits spans to R=1 and restages
+        # membership each round — an event-rate-dominated number, NOT the
+        # service layer's own cost (see service_overhead_fraction)
+        "rounds_per_sec_under_traffic": round(rps_traffic, 2),
+        "rounds_per_sec_blocking": round(rps_blocking, 2),
+        "rounds_per_sec_service_idle": round(rps_service, 2),
+        "service_overhead_fraction": round(
+            max(0.0, 1.0 - rps_service / rps_blocking), 4),
+        "snapshot_ms": round(snap_mem_ms, 2),
+        "snapshot_to_disk_ms": round(snap_disk_ms, 2),
+        "events_applied": stats["events_applied"],
+    }
+
+
+def main(path="BENCH_stream.json", **kw):
+    res = run(**kw)
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+    merged["service"] = res
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2)
+        f.write("\n")
+    return res
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=2))

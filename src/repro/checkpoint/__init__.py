@@ -1,3 +1,5 @@
-from repro.checkpoint.io import load_checkpoint, save_checkpoint
+from repro.checkpoint.io import (load_checkpoint, load_fed_checkpoint,
+                                 save_checkpoint, save_fed_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint",
+           "save_fed_checkpoint", "load_fed_checkpoint"]

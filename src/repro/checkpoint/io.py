@@ -1,4 +1,17 @@
-"""Pytree checkpointing: flattened-key npz + json manifest.
+"""Pytree + control-plane checkpointing: flattened-key npz + json manifest.
+
+Two layers:
+
+  * ``save_checkpoint``/``load_checkpoint`` — the original params-only
+    format (flattened dict-pytree npz + manifest), unchanged;
+  * ``save_fed_checkpoint``/``load_fed_checkpoint`` — a federation run's
+    full restart state: params plus the event-sourced ``FedState`` dict
+    (fed/state.py), the RoundRecord history and the engine geometry, so a
+    killed streamed run resumes round-for-round
+    (``StreamScheduler.save``/``restore``).  Plain-data structures are
+    split by ``jsonify_tree`` into a JSON skeleton (manifest) and the
+    numpy arrays it referenced (stored in the npz under ``blob/...``
+    keys) — ``dejsonify_tree`` reassembles them exactly.
 
 Sharded arrays are gathered to host before save (fine for the simulation
 scale; a production deployment would swap in per-shard writes keyed by
@@ -10,6 +23,9 @@ import os
 
 import jax
 import numpy as np
+
+_ARRAY_KEY = "__npz__"
+_TUPLE_KEY = "__tuple__"
 
 
 def _flatten(tree, prefix=""):
@@ -33,6 +49,54 @@ def _unflatten(flat):
     return tree
 
 
+def jsonify_tree(obj, arrays: dict, prefix: str = "blob"):
+    """Split a plain-data structure (dicts/lists/tuples/scalars/ndarrays)
+    into a JSON-able skeleton + extracted arrays.  Each ndarray leaf is
+    replaced by ``{"__npz__": key}`` and stored in ``arrays`` under that
+    key; tuples are tagged so they round-trip as tuples."""
+    if isinstance(obj, np.ndarray):
+        key = f"{prefix}/{len(arrays)}"
+        arrays[key] = obj
+        return {_ARRAY_KEY: key}
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    if isinstance(obj, dict):
+        for k in obj:
+            if not isinstance(k, str):
+                # str(k) would silently come back str-keyed from the
+                # round trip; reject so callers encode (FedState stores
+                # int-keyed maps as sorted item lists for this reason)
+                raise TypeError(f"jsonify_tree: dict keys must be str, "
+                                f"got {k!r}")
+        return {k: jsonify_tree(v, arrays, prefix)
+                for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return {_TUPLE_KEY: [jsonify_tree(v, arrays, prefix) for v in obj]}
+    if isinstance(obj, list):
+        return [jsonify_tree(v, arrays, prefix) for v in obj]
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    raise TypeError(f"jsonify_tree: unsupported type {type(obj)!r}")
+
+
+def dejsonify_tree(obj, arrays: dict):
+    """Inverse of jsonify_tree: re-inline the extracted arrays."""
+    if isinstance(obj, dict):
+        if set(obj) == {_ARRAY_KEY}:
+            return arrays[obj[_ARRAY_KEY]]
+        if set(obj) == {_TUPLE_KEY}:
+            return tuple(dejsonify_tree(v, arrays)
+                         for v in obj[_TUPLE_KEY])
+        return {k: dejsonify_tree(v, arrays) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [dejsonify_tree(v, arrays) for v in obj]
+    return obj
+
+
 def save_checkpoint(path: str, params, step: int = 0, extra: dict = None):
     os.makedirs(path, exist_ok=True)
     flat = _flatten(params)
@@ -54,3 +118,53 @@ def load_checkpoint(path: str):
     with np.load(os.path.join(path, "params.npz")) as z:
         flat = {k: z[k] for k in z.files}
     return _unflatten(flat), manifest
+
+
+# -- federation-run checkpoints (params + FedState + history) ------------------
+
+def save_fed_checkpoint(path: str, params, state: dict, *,
+                        history: dict = None, config: dict = None,
+                        extra: dict = None) -> None:
+    """Persist a federation run's complete restart state.
+
+    ``state`` is FedState.to_dict() (plain data + ndarrays; the pending
+    event queue — including brand-new Arrival client payloads — and the
+    RNG/key state ride along); ``history`` is the columnar RoundRecord
+    dict (fed/stream.history_to_dict); ``config`` the engine geometry
+    (StreamScheduler.engine_config).  One npz carries the param leaves
+    (``params/...``) plus every extracted state/history array
+    (``blob/...``); the manifest holds the JSON skeletons."""
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(params)
+    arrays = {f"params/{k}": np.asarray(jax.device_get(v))
+              for k, v in flat.items()}
+    manifest = {
+        "format": "fed-checkpoint-v1",
+        "state": jsonify_tree(state, arrays, prefix="blob/state"),
+        "history": (jsonify_tree(history, arrays, prefix="blob/history")
+                    if history is not None else None),
+        "config": config or {},
+        "extra": extra or {},
+        "param_keys": sorted(flat),
+    }
+    np.savez(os.path.join(path, "fed_checkpoint.npz"), **arrays)
+    with open(os.path.join(path, "fed_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_fed_checkpoint(path: str):
+    """Returns (params, state_dict, history_dict, config, extra)."""
+    with open(os.path.join(path, "fed_manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != "fed-checkpoint-v1":
+        raise ValueError(f"not a fed checkpoint: {path!r} "
+                         f"({manifest.get('format')!r})")
+    with np.load(os.path.join(path, "fed_checkpoint.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    params = _unflatten({k[len("params/"):]: v
+                         for k, v in arrays.items()
+                         if k.startswith("params/")})
+    state = dejsonify_tree(manifest["state"], arrays)
+    history = (dejsonify_tree(manifest["history"], arrays)
+               if manifest["history"] is not None else None)
+    return params, state, history, manifest["config"], manifest["extra"]

@@ -64,16 +64,44 @@ def _constrain_client_deltas(sharding, deltas, param_specs):
 
 def _constrain_batch(sharding, batches, axis_dim: int):
     """Shard the batch dim of a batch pytree over the federation axes
-    when it divides evenly (the client-sequential data-parallel layout);
-    leave ragged dims to GSPMD."""
+    (the client-sequential data-parallel layout).
+
+    Ragged batch dims used to fall back silently to GSPMD's choice (in
+    practice: replication of the whole batch, wasting every federation
+    device but one).  Policy decided here: **pad to divisible** — the
+    batch dim is extended to the next multiple of the shard count by
+    wrapping around to the leading samples, then sharded.  The gradient
+    becomes a weighted batch mean in which the first ``pad`` samples
+    count twice — statistically benign for SGD, bit-identical whenever
+    the batch already divides (pad == 0, the config every production run
+    should use), and logged once per shape at trace time so a ragged
+    deployment shows up in the logs rather than in the profile."""
     n = sharding.n_shards
 
     def con(l):
-        if l.ndim > axis_dim and l.shape[axis_dim] % n == 0:
-            return sharding.constrain_client(l, axis_dim)
-        return l
+        if l.ndim <= axis_dim:
+            return l
+        b = l.shape[axis_dim]
+        pad = -b % n
+        if pad:
+            _log_batch_padding(b, n, pad)
+            wrap = jnp.arange(b + pad) % b
+            l = jnp.take(l, wrap, axis=axis_dim)
+        return sharding.constrain_client(l, axis_dim)
 
     return jax.tree.map(con, batches)
+
+
+@functools.lru_cache(maxsize=None)
+def _log_batch_padding(b: int, n_shards: int, pad: int) -> None:
+    """Once per (batch, shards) shape — tracing re-runs this, real
+    dispatch never does."""
+    import logging
+    logging.getLogger(__name__).warning(
+        "fed_round_sequential: batch dim %d is ragged over %d federation "
+        "shards; padding to %d by wrapping %d leading samples "
+        "(padding fraction %.3f — the first %d samples weigh double in "
+        "the batch mean)", b, n_shards, b + pad, pad, pad / (b + pad), pad)
 
 
 def fed_round_parallel(loss_fn, params, batches, alpha, coeffs, eta, *,

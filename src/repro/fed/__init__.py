@@ -1,12 +1,15 @@
 from repro.fed.driver import Client, FederatedTrainer, RoundRecord
 from repro.fed.engine import RoundEngine
+from repro.fed.events import (Arrival, Departure, InactivityBurst,
+                              ParticipationEvent, TraceShift)
+from repro.fed.service import FederationService
 from repro.fed.sharding import FedSharding, make_fed_sharding
-from repro.fed.stream import (Arrival, Departure, InactivityBurst,
-                              ParticipationEvent, StreamScheduler,
-                              TraceShift)
+from repro.fed.state import FedState
+from repro.fed.stream import StreamScheduler
 from repro.fed.task import ArrayTask, ClientTask, LMTask
 
 __all__ = ["Client", "FederatedTrainer", "RoundRecord", "RoundEngine",
            "Arrival", "Departure", "InactivityBurst", "ParticipationEvent",
            "StreamScheduler", "TraceShift", "FedSharding",
-           "make_fed_sharding", "ArrayTask", "ClientTask", "LMTask"]
+           "make_fed_sharding", "ArrayTask", "ClientTask", "LMTask",
+           "FedState", "FederationService"]

@@ -13,7 +13,10 @@ chunked ``lax.scan``:
     trace_s_cdf) or supplied as a host-precomputed *plan* — the plan path
     consumes the trainer's numpy RNG in the seed order, so it is
     sample-for-sample identical to the legacy loop and is what the parity
-    tests compare against;
+    tests compare against; on-device draws fold the round index into the
+    caller's base key per round (device_sample_round), so round tau's
+    randomness never depends on span/chunk structure — the invariance
+    mid-stream checkpoint/resume rests on (fed/state.py);
   * scheme A/B/C coefficients, fast-reboot boosts (per-client (tau0,
     boost) arrays evaluated at each in-chunk tau, so the O(dt^-2) decay is
     exact mid-chunk) and the staircase LR are computed inside the step;
@@ -120,27 +123,40 @@ def trace_s_cdf(clients, E: int) -> np.ndarray:
         if clients else np.zeros((0, E + 1), np.float32)
 
 
-def device_sample_span(key, R: int, active, n, s_cdf, E: int, B: int):
-    """On-device sampling of participation + batch indices for a whole
-    R-round span in one vectorized draw.
+def device_sample_round(key, active, n, s_cdf, E: int, B: int):
+    """On-device sampling of participation + batch indices for ONE round.
 
     active: (C,) 0/1 mask of clients participating this span; n: (C,)
     dataset sizes; s_cdf: (C, E+1) per-client CDF of completed epochs
-    (trace_s_cdf).  Returns alphas (R, C, E) f32, idxs (R, C, E, B) i32.
+    (trace_s_cdf).  Returns alpha (C, E) f32, idx (C, E, B) i32.
+
+    The engine calls this inside the scan body with a per-round key
+    ``fold_in(base_key, tau)`` — round tau's draw is a pure function of
+    (base_key, tau), never of how training was cut into run() calls,
+    spans or chunks.  That invariance is what makes mid-stream
+    checkpoint/resume bit-exact in device mode (fed/state.py).
     """
     ks, kb = jax.random.split(key)
-    C = n.shape[0]
     # inverse-CDF draw of s: s = #{k : cdf[k] < u}
-    u = jax.random.uniform(ks, (R, C))
-    s = jnp.sum(u[:, :, None] > s_cdf[None, :, :], axis=-1)
-    s = s.astype(jnp.float32) * active[None, :]
-    alphas = (jnp.arange(E, dtype=jnp.float32)[None, None, :]
-              < s[:, :, None]).astype(jnp.float32)
-    ub = jax.random.uniform(kb, (R, C, E, B))
-    nf = n.astype(jnp.float32)[None, :, None, None]
-    idxs = jnp.minimum((ub * nf).astype(jnp.int32),
-                       n[None, :, None, None] - 1)
-    return alphas, idxs
+    u = jax.random.uniform(ks, (n.shape[0],))
+    s = jnp.sum(u[:, None] > s_cdf, axis=-1)
+    s = s.astype(jnp.float32) * active
+    alpha = (jnp.arange(E, dtype=jnp.float32)[None, :]
+             < s[:, None]).astype(jnp.float32)
+    ub = jax.random.uniform(kb, (n.shape[0], E, B))
+    nf = n.astype(jnp.float32)[:, None, None]
+    idx = jnp.minimum((ub * nf).astype(jnp.int32),
+                      n[:, None, None] - 1)
+    return alpha, idx
+
+
+def device_sample_span(key, R: int, active, n, s_cdf, E: int, B: int):
+    """R rounds of device_sample_round under per-round folded keys:
+    alphas (R, C, E) f32, idxs (R, C, E, B) i32.  Convenience/testing
+    view of the sampling law the engine applies inside its scan."""
+    keys = jax.vmap(lambda t: jax.random.fold_in(key, t))(jnp.arange(R))
+    return jax.vmap(
+        lambda k: device_sample_round(k, active, n, s_cdf, E, B))(keys)
 
 
 def _slot_write(buf, row, slot):
@@ -508,19 +524,21 @@ class RoundEngine:
         if sampled:
             def chunk(params, data, n, s_cdf, key, active, taus,
                       p, rb_tau0, rb_boost, lr_shift):
-                alphas, idxs = device_sample_span(
-                    key, R, active, n, s_cdf, self.E, self.B)
-                if self.sharding is not None:
-                    # keep the per-span draws sharded on the client dim
-                    alphas = self.sharding.constrain_client(alphas, 1)
-                    idxs = self.sharding.constrain_client(idxs, 1)
-
-                def body(w, xs):
-                    alpha, idx, tau = xs
+                def body(w, tau):
+                    # per-round key: the draw for round tau is a pure
+                    # function of (base key, tau), invariant to span and
+                    # chunk structure — the checkpoint/resume contract
+                    kt = jax.random.fold_in(key, tau)
+                    alpha, idx = device_sample_round(
+                        kt, active, n, s_cdf, self.E, self.B)
+                    if self.sharding is not None:
+                        # keep the per-round draws sharded on the client dim
+                        alpha = self.sharding.constrain_client(alpha, 0)
+                        idx = self.sharding.constrain_client(idx, 0)
                     return self._round_core(w, data, alpha, idx,
                                             tau, p, rb_tau0, rb_boost,
                                             lr_shift)
-                return jax.lax.scan(body, params, (alphas, idxs, taus))
+                return jax.lax.scan(body, params, taus)
         else:
             def chunk(params, data, alphas, idxs, taus, p,
                       rb_tau0, rb_boost, lr_shift):
@@ -585,10 +603,11 @@ class RoundEngine:
                                taus, p, rb_tau0, rb_boost, lr_shift)
             else:
                 fn = self._get_fn(r, sampled=True)
-                # fold per chunk so split chunks never reuse randomness
-                sub = jax.random.fold_in(key, tau)
+                # the base key passes through unchanged: per-round
+                # randomness folds tau inside the chunk body, so chunk
+                # splits never reuse (or re-shuffle) randomness
                 params, m = fn(params, self.data, self.n,
-                               self.s_cdf, sub, active, taus, p,
+                               self.s_cdf, key, active, taus, p,
                                rb_tau0, rb_boost, lr_shift)
             ms.append(jax.tree.map(np.asarray, m))
             off += r

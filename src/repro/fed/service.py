@@ -1,0 +1,233 @@
+"""FederationService: concurrent event ingestion over a live scheduler.
+
+Closes the ROADMAP's "serve.py gap": the StreamScheduler consumes events
+pushed between blocking ``run()`` calls, but nothing *produced* them while
+training ran.  This layer makes the control plane live:
+
+  * a worker thread runs scheduler spans (``span_rounds`` per iteration)
+    while any number of producer threads ``submit()`` ParticipationEvents
+    concurrently;
+  * the inbox is a bounded queue — a full inbox blocks (or rejects, with
+    ``block=False``) the producer: backpressure instead of unbounded
+    memory growth under heavy traffic;
+  * ``pause()``/``resume()`` gate span execution without stopping
+    ingestion; ``drain()`` waits until every submitted event has been
+    handed to the scheduler;
+  * ``snapshot()`` captures a span-boundary-consistent checkpoint (the
+    FedState dict + params, optionally persisted via
+    ``StreamScheduler.save``) without tearing the service down — the
+    mid-stream checkpoint/resume path for deployments.
+
+All jax work stays on the worker thread; producers only touch the inbox.
+Scheduler state is guarded by one lock the worker releases between spans,
+so control calls (snapshot/pause/stats) interleave at span granularity.
+
+Usage::
+
+    svc = FederationService(scheduler, span_rounds=4, eval_every=8,
+                            max_rounds=200)
+    with svc:                          # starts the worker
+        svc.submit(Arrival(tau=12, client=new_client))   # any thread
+        svc.wait_rounds(200)
+    print(svc.stats())
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Optional
+
+from repro.fed.events import ParticipationEvent
+from repro.fed.stream import StreamScheduler
+
+
+class FederationService:
+    """Thread-safe ingestion + span-execution service over one
+    StreamScheduler."""
+
+    def __init__(self, scheduler: StreamScheduler, *,
+                 span_rounds: int = 4, eval_every: int = 1 << 30,
+                 max_rounds: Optional[int] = None,
+                 max_pending: int = 1024,
+                 idle_sleep: float = 0.002):
+        if span_rounds < 1:
+            raise ValueError(f"span_rounds must be >= 1, got {span_rounds}")
+        self.scheduler = scheduler
+        self.span_rounds = span_rounds
+        self.eval_every = eval_every
+        self.max_rounds = max_rounds
+        self._inbox: "queue.Queue[ParticipationEvent]" = queue.Queue(
+            maxsize=max_pending)
+        self._idle_sleep = idle_sleep
+        self._lock = threading.RLock()       # guards scheduler state
+        self._rounds_cv = threading.Condition(self._lock)
+        # producers never take _lock (a span in flight would stall
+        # ingestion); the submission counter gets its own tiny lock
+        self._submit_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._paused = threading.Event()
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self.events_submitted = 0
+        self.events_ingested = 0
+        self.spans_run = 0
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> "FederationService":
+        if self._worker is not None and self._worker.is_alive():
+            return self
+        self._stop.clear()
+        self._worker = threading.Thread(target=self._loop,
+                                        name="federation-service",
+                                        daemon=True)
+        self._worker.start()
+        return self
+
+    def stop(self, wait: bool = True) -> None:
+        self._stop.set()
+        with self._rounds_cv:                # wake wait_rounds() callers
+            self._rounds_cv.notify_all()
+        if wait and self._worker is not None:
+            self._worker.join()
+        if self._error is not None:
+            raise RuntimeError("federation worker died") from self._error
+
+    def __enter__(self) -> "FederationService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(wait=True)
+
+    @property
+    def running(self) -> bool:
+        return (self._worker is not None and self._worker.is_alive()
+                and not self._stop.is_set())
+
+    # -- ingestion (any thread) ------------------------------------------------
+    def submit(self, *events: ParticipationEvent, block: bool = True,
+               timeout: Optional[float] = None) -> bool:
+        """Enqueue events for ingestion.  A full inbox applies
+        backpressure: blocks (optionally up to ``timeout``) when
+        ``block=True``, else returns False without enqueueing anything
+        beyond the events already accepted."""
+        for e in events:
+            try:
+                self._inbox.put(e, block=block, timeout=timeout)
+            except queue.Full:
+                return False
+            with self._submit_lock:          # concurrent producers: the
+                self.events_submitted += 1   # += is not atomic, and
+            # drain() compares against this counter — a lost update
+            # would let it return with an event still in flight
+        return True
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Wait until every submitted event has been handed to the
+        scheduler (it may still be *pending* on the scheduler's own queue
+        until its tau is reached).  True if drained within timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while self.events_ingested < self.events_submitted \
+                or not self._inbox.empty():
+            if self._error is not None:
+                raise RuntimeError("federation worker died") from self._error
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+            time.sleep(self._idle_sleep)
+        return True
+
+    # -- control ---------------------------------------------------------------
+    def pause(self) -> None:
+        """Stop span execution (ingestion continues).  Returns once the
+        in-flight span has finished, so scheduler state is boundary-
+        consistent afterwards."""
+        self._paused.set()
+        with self._lock:
+            pass                      # barrier: wait out the current span
+
+    def resume(self) -> None:
+        self._paused.clear()
+
+    def wait_rounds(self, n: int, timeout: Optional[float] = None) -> bool:
+        """Block until the scheduler clock reaches round n."""
+        with self._rounds_cv:
+            ok = self._rounds_cv.wait_for(
+                lambda: self.scheduler._next_tau >= n
+                or self._error is not None or self._stop.is_set(),
+                timeout=timeout)
+        if self._error is not None:
+            raise RuntimeError("federation worker died") from self._error
+        return ok and self.scheduler._next_tau >= n
+
+    def snapshot(self, path: Optional[str] = None) -> dict:
+        """Span-boundary-consistent control-plane snapshot.  With
+        ``path``, also persists the full resumable checkpoint
+        (StreamScheduler.save — params + FedState + history).  Returns
+        the FedState dict."""
+        was_paused = self._paused.is_set()
+        self.pause()                  # settle at a span boundary
+        try:
+            with self._lock:
+                self._ingest()        # fold already-submitted events in
+                state = self.scheduler.state.to_dict()
+                if path is not None:
+                    self.scheduler.save(path)
+        finally:
+            if not was_paused:
+                self.resume()
+        return state
+
+    def stats(self) -> dict:
+        sch = self.scheduler
+        return {"rounds": sch._next_tau,
+                "spans_run": self.spans_run,
+                "events_submitted": self.events_submitted,
+                "events_ingested": self.events_ingested,
+                "events_applied": sch.events_applied,
+                "events_pending": sch.pending,
+                "inbox_depth": self._inbox.qsize(),
+                "running": self.running,
+                "paused": self._paused.is_set()}
+
+    # -- worker ----------------------------------------------------------------
+    def _ingest(self) -> int:
+        """Move everything in the inbox onto the scheduler queue (caller
+        holds the lock)."""
+        n = 0
+        while True:
+            try:
+                e = self._inbox.get_nowait()
+            except queue.Empty:
+                break
+            self.scheduler.push(e)
+            self.events_ingested += 1
+            n += 1
+        return n
+
+    def _loop(self) -> None:
+        try:
+            while not self._stop.is_set():
+                with self._lock:
+                    self._ingest()
+                    done = (self.max_rounds is not None
+                            and self.scheduler._next_tau >= self.max_rounds)
+                    if done:
+                        # budget reached: wake waiters so wait_rounds(n)
+                        # with an unreachable n re-checks its predicate
+                        # instead of sleeping past a concurrent stop()
+                        self._rounds_cv.notify_all()
+                    elif not self._paused.is_set():
+                        n = self.span_rounds
+                        if self.max_rounds is not None:
+                            n = min(n, self.max_rounds
+                                    - self.scheduler._next_tau)
+                        self.scheduler.run(n, eval_every=self.eval_every)
+                        self.spans_run += 1
+                        self._rounds_cv.notify_all()
+                        continue
+                # paused or round budget reached: idle, keep ingesting
+                time.sleep(self._idle_sleep)
+        except BaseException as e:          # surface on the control thread
+            self._error = e
+            with self._rounds_cv:
+                self._rounds_cv.notify_all()

@@ -1,27 +1,33 @@
-"""Streaming participation: an event queue driving capacity-slotted spans.
+"""Streaming participation: an event-sourced control plane driving spans.
 
 The paper's core claim is that devices may "depart or arrive in the middle
 of training" — yet FederatedTrainer required every arrival/departure to be
 declared at construction time (Client.active_from / departs_at).  This
 module makes participation an external *stream* (cf. Gu et al. 2021 on
 arbitrary device unavailability; Wang & Ji 2022 on arbitrary client
-participation):
+participation), split into two layers:
 
-  * typed ParticipationEvents — Arrival (carrying a brand-new client's
-    data and trace, admitted into a free engine slot), Departure (with the
-    paper's include/exclude/auto §4.3 policy), TraceShift (a client's
-    availability law changes), InactivityBurst (a cohort masked for a
-    window — correlated unavailability);
-  * a StreamScheduler that coalesces pending events at span boundaries,
-    recomputes weights / reboot / LR-restart state, and drives
-    RoundEngine.run_span.  Between events, R rounds run per host dispatch
-    on device-resident data; events cost one slot write each, never an
+  * FedState (fed/state.py) — the pure, serializable control plane: slot
+    registry, objective/joined/departed/mask membership, reboot arrays,
+    LR-shift round, the pending event queue and the RNG/key state, with
+    event application as plain-data state transitions that *return* the
+    implied engine actions;
+  * StreamScheduler (here) — the thin span-execution loop: it pops due
+    events at span boundaries, executes the returned slot actions against
+    the capacity-slotted RoundEngine (arrival runs coalesce into one
+    fused admit_many burst), and drives RoundEngine.run_span over the
+    event-free gaps.  Between events, R rounds run per host dispatch on
+    device-resident data; events cost one slot write each, never an
     engine rebuild or a scan recompile.
 
-FederatedTrainer (fed/driver.py) is a thin adapter over this scheduler:
-it translates its precomputed Client.active_from/departs_at schedule into
-an event stream at the first engine run, so the legacy API and the
-streaming API share one span-splitting implementation.
+Because FedState round-trips through to_dict()/from_dict() and per-round
+randomness is derived by folding the round index into a never-split base
+key (fed/engine.py), ``save()``/``restore()`` give exact mid-stream
+checkpoint/resume: a killed run restored from disk replays the remaining
+rounds bit-for-bit against an uninterrupted one
+(tests/test_checkpoint_resume.py).  fed/service.py layers a thread-safe
+ingestion service on top; FederatedTrainer (fed/driver.py) remains a thin
+adapter translating its precomputed schedule into events.
 
 Event application semantics: events are applied at the first span boundary
 with tau >= event.tau (spans always break at queued event taus, so an
@@ -35,85 +41,39 @@ Usage::
                           loss_fn=loss_fn, capacity=16,
                           events=[Arrival(tau=5, client=new_client)])
     sch.run(n_rounds=20, eval_every=5)   # push() more events, run() again
+    sch.save("ckpt/")                    # ... crash ...
+    sch = StreamScheduler.restore("ckpt/", loss_fn=loss_fn)
+    sch.run(n_rounds=20, eval_every=5)   # resumes round-for-round
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arrivals import RebootState
-from repro.core.departures import BoundTerms, should_exclude
-from repro.core.participation import Trace
+from repro.core.departures import BoundTerms
 from repro.fed.driver import Client, RoundRecord
 from repro.fed.engine import RoundEngine
+# event types re-exported for compatibility (they lived here pre-PR-5)
+from repro.fed.events import (Arrival, Departure,  # noqa: F401
+                              InactivityBurst, ParticipationEvent,
+                              TraceShift)
+from repro.fed.state import FedState
 
-
-# -- the event model ----------------------------------------------------------
-
-@dataclass(frozen=True)
-class Arrival:
-    """A device joins training at round tau.
-
-    Either ``client`` is a brand-new Client (constructed after the engine
-    was built; admitted into a free capacity slot), or ``client_id``
-    references an already-registered client (activation only — the path
-    the FederatedTrainer adapter uses for precomputed schedules).
-    """
-    tau: int
-    client: Optional[Client] = None
-    client_id: Optional[int] = None
-    fast_reboot: Optional[bool] = None   # None => scheduler default
-
-
-@dataclass(frozen=True)
-class Departure:
-    """A device leaves at round tau.  policy: include | exclude | auto
-    (Corollary 4.0.3 remaining-time criterion); None uses the client's
-    own departure_policy."""
-    tau: int
-    client_id: int
-    policy: Optional[str] = None
-
-
-@dataclass(frozen=True)
-class TraceShift:
-    """A client's availability law changes at round tau (e.g. a device
-    moves from charger+wifi to battery+cellular)."""
-    tau: int
-    client_id: int
-    trace: Trace
-
-
-@dataclass(frozen=True)
-class InactivityBurst:
-    """A cohort goes dark for ``duration`` rounds starting at tau
-    (correlated unavailability: a regional outage, a synchronized OS
-    update).  Masked clients stay in the objective — their weight mass is
-    unchanged — but contribute s = 0 until the burst expires."""
-    tau: int
-    duration: int
-    client_ids: Tuple[int, ...]
-
-
-ParticipationEvent = Union[Arrival, Departure, TraceShift, InactivityBurst]
-
-
-# -- the scheduler ------------------------------------------------------------
 
 class StreamScheduler:
     """Consumes a stream of ParticipationEvents while driving
     RoundEngine.run_span over the event-free gaps.
 
     Scheduling loop: at each span start, pop every queued event with
-    tau <= now and apply it (slot admit/evict, objective shift, reboot
-    boost, LR restart, trace swap, burst masking); then run rounds until
-    the next event tau / burst expiry / eval round, whichever is first.
+    tau <= now, apply it to the FedState (slot bookkeeping, objective
+    shift, reboot boost, LR restart, burst masking) and execute the
+    returned engine actions (admit/evict/set_trace — consecutive admits
+    coalesce into one fused admit_many burst); then run rounds until the
+    next event tau / burst expiry / eval round, whichever is first.
     Membership-derived span arguments (weights p, active mask, reboot
     arrays) are recomputed only when an event dirtied them.
 
@@ -123,7 +83,7 @@ class StreamScheduler:
                    used by the trainer-parity tests.
     """
 
-    def __init__(self, *, clients: Sequence[Client], init_params,
+    def __init__(self, *, clients: Sequence[Client] = (), init_params,
                  engine: Optional[RoundEngine] = None,
                  loss_fn: Optional[Callable] = None,
                  task=None, engine_mode: str = "client_parallel",
@@ -145,14 +105,15 @@ class StreamScheduler:
                  history: Optional[List[RoundRecord]] = None,
                  reboots: Optional[List[RebootState]] = None,
                  objective: Optional[set] = None,
+                 state: Optional[FedState] = None,
                  events: Sequence[ParticipationEvent] = ()):
         if mode not in ("device", "plan"):
             raise ValueError(f"mode must be device|plan, got {mode!r}")
         self.mode = mode
-        self.clients: List[Client] = list(clients)
+        clients = list(clients) if state is None else state.clients
         if engine is None:
             engine = RoundEngine(
-                loss_fn=loss_fn, task=task, clients=self.clients,
+                loss_fn=loss_fn, task=task, clients=clients,
                 local_epochs=local_epochs, batch_size=batch_size,
                 scheme=scheme, eta0=eta0, chunk_size=chunk_size, agg=agg,
                 interpret=interpret, donate=donate,
@@ -166,178 +127,90 @@ class StreamScheduler:
         self.params = init_params
         self.eval_fn = eval_fn
         self._evaluate = evaluate          # optional external eval callback
-        self.reboot_boost = reboot_boost
-        self.fast_reboot = fast_reboot
-        self.horizon = horizon
-        self.bound_terms = bound_terms or BoundTerms(
-            D=5.0, V=20.0, gamma=10.0, E=self.E)
-        self.rng = rng if rng is not None else np.random.default_rng(seed)
-        self._key = key if key is not None else jax.random.PRNGKey(seed)
-
-        # slot registry: client id == index into self.clients; founding
-        # clients occupy slots 0..C-1 in id order
-        C = len(self.clients)
-        self.slot_of: Dict[int, int] = {i: i for i in range(C)}
-        self.client_at: Dict[int, int] = {i: i for i in range(C)}
-        self.free_slots: List[int] = list(range(C, engine.capacity))
-        heapq.heapify(self.free_slots)
-
-        # membership state
-        self.objective: set = (objective if objective is not None
-                               else set(range(C)))
-        self.joined: Dict[int, int] = {i: 0 for i in self.objective}
-        self.departed: set = set()
-        self.mask_until: Dict[int, int] = {}
-        self._expiry_taus: set = set()
-        self.lr_shift_tau = 0
-        self._rb_tau0 = np.zeros(engine.capacity, np.int32)
-        self._rb_boost = np.ones(engine.capacity, np.float32)
-        self.reboots: List[RebootState] = (reboots if reboots is not None
-                                           else [])
+        if state is None:
+            state = FedState(
+                clients=clients, capacity=engine.capacity,
+                reboot_boost=reboot_boost, fast_reboot=fast_reboot,
+                horizon=horizon, bound_terms=bound_terms,
+                local_epochs=engine.E, seed=seed, rng=rng, key=key,
+                objective=objective, reboots=reboots)
+        self.state = state
         self.history: List[RoundRecord] = (history if history is not None
                                            else [])
-
-        # the event queue (heap keyed by (tau, arrival order))
-        self._queue: List[Tuple[int, int, ParticipationEvent]] = []
-        self._seq = itertools.count()
-        self._next_tau = 0
         self._span_args = None
         self._dirty = True
-        self.events_applied = 0
+        self._eval_cache = None            # (objective_version, x, y)
         self.push(*events)
+
+    # -- control-plane views (the public surface pre-refactor) ----------------
+    @property
+    def clients(self) -> List[Client]:
+        return self.state.clients
+
+    @property
+    def objective(self) -> set:
+        return self.state.objective
+
+    @property
+    def departed(self) -> set:
+        return self.state.departed
+
+    @property
+    def slot_of(self):
+        return self.state.slot_of
+
+    @property
+    def client_at(self):
+        return self.state.client_at
+
+    @property
+    def free_slots(self):
+        return self.state.free_slots
+
+    @property
+    def reboots(self) -> List[RebootState]:
+        return self.state.reboots
+
+    @property
+    def lr_shift_tau(self) -> int:
+        return self.state.lr_shift_tau
+
+    @property
+    def events_applied(self) -> int:
+        return self.state.events_applied
+
+    @property
+    def rng(self) -> np.random.Generator:
+        return self.state.rng
+
+    @property
+    def _next_tau(self) -> int:
+        return self.state.next_tau
+
+    @property
+    def _queue(self):
+        return self.state.queue
+
+    def data_weights(self) -> np.ndarray:
+        return self.state.data_weights()
 
     # -- queue ---------------------------------------------------------------
     def push(self, *events: ParticipationEvent) -> None:
         """Enqueue participation events (any order; any time — including
         between run() calls, which is the streaming use case)."""
-        for e in events:
-            heapq.heappush(self._queue, (e.tau, next(self._seq), e))
+        self.state.push(*events)
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return self.state.pending
 
-    # -- membership ----------------------------------------------------------
-    def _active(self, i: int, tau: int) -> bool:
-        return (i in self.objective and i not in self.departed
-                and self.joined.get(i, tau + 1) <= tau
-                and self.mask_until.get(i, tau) <= tau)
-
-    def _register(self, client: Client) -> int:
-        self.clients.append(client)
-        return len(self.clients) - 1
-
-    def _alloc_slot(self, i: int) -> int:
-        if not self.free_slots:
-            raise RuntimeError(
-                f"engine capacity {self.engine.capacity} exhausted: no "
-                f"free slot for arriving client {i} (build the engine "
-                f"with a larger capacity=)")
-        slot = heapq.heappop(self.free_slots)
-        self.slot_of[i] = slot
-        self.client_at[slot] = i
-        return slot
-
-    def _free_slot(self, i: int) -> None:
-        slot = self.slot_of.pop(i, None)
-        if slot is None:
-            return
-        del self.client_at[slot]
-        self.engine.evict(slot)
-        self._rb_tau0[slot] = 0
-        self._rb_boost[slot] = 1.0
-        heapq.heappush(self.free_slots, slot)
-
-    # -- event application ----------------------------------------------------
-    def _admit(self, slot: int, client: Client,
-               admits: Optional[list]) -> None:
-        """Stage a slot admission: coalesced into one admit_many burst at
-        the span boundary when a batch list is given (the scheduler
-        path), else written through immediately."""
-        if admits is None:
-            self.engine.admit(slot, client)
-        else:
-            admits.append((slot, client))
-
-    def _apply(self, e: ParticipationEvent, tau: int,
-               admits: Optional[list] = None) -> str:
-        if isinstance(e, Arrival):
-            if e.client is not None:
-                i = self._register(e.client)
-                slot = self._alloc_slot(i)
-                self._admit(slot, e.client, admits)
-            else:
-                i = e.client_id
-                if i is None or not 0 <= i < len(self.clients):
-                    raise ValueError(f"Arrival without client needs a "
-                                     f"registered client_id, got {i!r}")
-                if i not in self.slot_of:
-                    slot = self._alloc_slot(i)
-                    self._admit(slot, self.clients[i], admits)
-            if i in self.objective:
-                if i not in self.departed:
-                    return ""                   # duplicate arrival: no-op
-                # rejoin of an include-departed device: the objective
-                # never shifted, so no LR restart / reboot boost — the
-                # device simply resumes participating
-                self.departed.discard(i)
-                self.joined[i] = tau
-                return f"rejoin:{i};"
-            self.objective.add(i)
-            self.joined[i] = tau
-            self.departed.discard(i)
-            self.lr_shift_tau = tau
-            fast = self.fast_reboot if e.fast_reboot is None else \
-                e.fast_reboot
-            if fast:
-                self.reboots.append(RebootState(tau, i, self.reboot_boost))
-                slot = self.slot_of[i]
-                self._rb_tau0[slot] = tau
-                self._rb_boost[slot] = self.reboot_boost
-            return f"arrival:{i};"
-
-        if isinstance(e, Departure):
-            i = e.client_id
-            if i not in self.objective or i in self.departed:
-                return ""                       # duplicate/unknown: no-op
-            cl = self.clients[i]
-            policy = e.policy or cl.departure_policy
-            if policy == "auto":
-                # Corollary 4.0.3: exclude iff enough training remains
-                T = self.horizon if self.horizon is not None else tau + 100
-                policy = "exclude" if should_exclude(
-                    T, tau, self.bound_terms, cl.gamma_l) else "include"
-            self.departed.add(i)
-            self._free_slot(i)
-            if policy == "exclude":
-                self.objective.discard(i)
-                self.lr_shift_tau = tau
-                return f"departure-exclude:{i};"
-            return f"departure-include:{i};"
-
-        if isinstance(e, TraceShift):
-            i = e.client_id
-            self.clients[i].trace = e.trace     # plan-mode draws follow
-            slot = self.slot_of.get(i)
-            if slot is not None:
-                self.engine.set_trace(slot, e.trace)
-            return f"trace-shift:{i};"
-
-        if isinstance(e, InactivityBurst):
-            until = tau + e.duration
-            for i in e.client_ids:
-                self.mask_until[i] = max(self.mask_until.get(i, 0), until)
-            self._expiry_taus.add(until)
-            ids = ",".join(str(i) for i in e.client_ids)
-            return f"burst:{ids}@{e.duration};"
-
-        raise TypeError(f"unknown participation event {e!r}")
-
+    # -- event application (executes FedState transitions on the engine) -----
     def _apply_events(self, tau: int) -> str:
+        st = self.state
         ev = ""
         # an arrival burst coalesces into one fused admit_many: slot
-        # writes are deferred while consecutive Arrivals pop, and flushed
-        # before any event type that may read or free a slot
+        # writes are deferred while consecutive admit actions accumulate,
+        # and flushed before any action that may read or free a slot
         admits: List = []
 
         def flush():
@@ -346,119 +219,92 @@ class StreamScheduler:
                 admits.clear()
 
         try:
-            while self._queue and self._queue[0][0] <= tau:
-                _, _, e = heapq.heappop(self._queue)
-                if not isinstance(e, Arrival):
-                    flush()
-                ev += self._apply(e, tau, admits)
-                self.events_applied += 1
+            while st.due(tau):
+                e = st.pop_event()
+                s, actions = st.apply(e, tau)
+                for act in actions:
+                    if act[0] == "admit":
+                        admits.append((act[1], st.clients[act[2]]))
+                    elif act[0] == "evict":
+                        flush()
+                        self.engine.evict(act[1])
+                    else:                       # ("set_trace", slot, trace)
+                        flush()
+                        self.engine.set_trace(act[1], act[2])
+                ev += s
+                st.events_applied += 1
         finally:
             # a raising event must not strand staged admissions: slot
             # bookkeeping already recorded them, so the engine writes
             # have to land even on the error path
             flush()
-        if tau in self._expiry_taus:
-            self._expiry_taus.discard(tau)
+        if st.expire(tau):
             self._dirty = True                  # masked cohort resumes
         if ev:
             self._dirty = True
         return ev
 
-    # -- span arguments -------------------------------------------------------
-    def data_weights(self) -> np.ndarray:
-        """Slot-indexed data weights p over the current objective.  An
-        include-departed client keeps its mass in the normalization (the
-        paper's §4.3 'include' keeps the old objective) but holds no
-        slot, so its column simply never appears — arithmetically
-        identical to a zero-coefficient column."""
-        p = np.zeros(self.engine.capacity)
-        total = sum(self.clients[i].n for i in self.objective)
-        for i in self.objective:
-            slot = self.slot_of.get(i)
-            if slot is not None:
-                p[slot] = self.clients[i].n / total
-        return p
-
-    def _build_span_args(self, tau: int):
-        p = self.data_weights()
-        active = np.zeros(self.engine.capacity, np.float32)
-        for slot, i in self.client_at.items():
-            if self._active(i, tau):
-                active[slot] = 1.0
-        return dict(p=jnp.asarray(p, jnp.float32),
-                    active=jnp.asarray(active),
-                    lr_shift_tau=self.lr_shift_tau,
-                    reboot_tau0=jnp.asarray(self._rb_tau0),
-                    reboot_boost=jnp.asarray(self._rb_boost))
-
-    def _span_end(self, tau: int, stop: int, ev: str,
-                  eval_every: int) -> int:
-        """Largest t <= stop such that [tau, t) has fixed membership and
-        at most one eval, which lands on the final round of the span."""
-        end = stop
-        if self._queue:
-            end = min(end, max(self._queue[0][0], tau + 1))
-        for t in self._expiry_taus:
-            if tau < t < end:
-                end = t
-        if ev:
-            return tau + 1      # event round: evaluate right after it
-        next_eval = tau + ((-tau) % eval_every)
-        if next_eval < end:
-            end = next_eval + 1
-        return end
-
-    # -- plan-mode sampling (seed RNG draw order) -----------------------------
-    def _sample_plan(self, tau: int):
-        Cs = self.engine.capacity
-        alpha = np.zeros((Cs, self.E), np.float32)
-        idx = np.zeros((Cs, self.E, self.B), np.int64)
-        for slot in range(Cs):
-            i = self.client_at.get(slot)
-            if i is None or not self._active(i, tau):
-                continue
-            cl = self.clients[i]
-            alpha[slot] = (np.arange(self.E)
-                           < cl.trace.sample_s(self.rng, self.E)
-                           ).astype(np.float32)
-            idx[slot] = self.rng.integers(0, cl.n, size=(self.E, self.B))
-        return alpha, idx
-
     # -- evaluation -----------------------------------------------------------
-    def evaluate(self):
-        if self._evaluate is not None:
-            return self._evaluate(self.params)
-        if self.eval_fn is None:
-            return float("nan"), float("nan")
+    def _eval_arrays(self):
+        """Concatenated held-out arrays over the objective, cached on
+        device and invalidated only when objective *membership* changes
+        (FedState.objective_version) — evaluate() used to re-concatenate
+        and re-transfer every eval round."""
+        version = self.state.objective_version
+        if self._eval_cache is not None and self._eval_cache[0] == version:
+            return self._eval_cache[1], self._eval_cache[2]
         xs = [self.clients[i].x_test for i in sorted(self.objective)
               if self.clients[i].x_test is not None]
         ys = [self.clients[i].y_test for i in sorted(self.objective)
               if self.clients[i].y_test is not None]
         if not xs:
+            x = y = None
+        else:
+            x = jnp.asarray(np.concatenate(xs))
+            y = jnp.asarray(np.concatenate(ys))
+        self._eval_cache = (version, x, y)
+        return x, y
+
+    def evaluate(self):
+        if self._evaluate is not None:
+            return self._evaluate(self.params)
+        if self.eval_fn is None:
             return float("nan"), float("nan")
-        return self.eval_fn(self.params, jnp.asarray(np.concatenate(xs)),
-                            jnp.asarray(np.concatenate(ys)))
+        x, y = self._eval_arrays()
+        if x is None:
+            return float("nan"), float("nan")
+        return self.eval_fn(self.params, x, y)
 
     # -- main loop ------------------------------------------------------------
     def run(self, n_rounds: int, eval_every: int = 1):
         eng = self.engine
-        start = self._next_tau
+        st = self.state
+        start = st.next_tau
         stop = start + n_rounds
         tau = start
         while tau < stop:
             ev = self._apply_events(tau)
-            end = self._span_end(tau, stop, ev, eval_every)
+            end = st.span_end(tau, stop, ev, eval_every)
             R = end - tau
             if self._span_args is None or self._dirty:
-                self._span_args = self._build_span_args(tau)
+                a = st.span_args(tau)
+                self._span_args = dict(
+                    p=jnp.asarray(a["p"]),
+                    active=jnp.asarray(a["active"]),
+                    lr_shift_tau=a["lr_shift_tau"],
+                    reboot_tau0=jnp.asarray(a["reboot_tau0"]),
+                    reboot_boost=jnp.asarray(a["reboot_boost"]))
                 self._dirty = False
             kwargs = self._span_args
             if self.mode == "device":
-                self._key, sub = jax.random.split(self._key)
+                # the base key is never split: per-round randomness folds
+                # the round index on device, so the sample stream is
+                # invariant to span/chunk structure (resume parity)
                 self.params, m = eng.run_span(self.params, tau, R,
-                                              key=sub, **kwargs)
+                                              key=st.key, **kwargs)
             else:
-                plans = [self._sample_plan(t) for t in range(tau, end)]
+                plans = [st.sample_plan(t, self.E, self.B)
+                         for t in range(tau, end)]
                 alphas = np.stack([pl[0] for pl in plans])
                 idxs = np.stack([pl[1] for pl in plans])
                 self.params, m = eng.run_span(self.params, tau, R,
@@ -473,5 +319,96 @@ class StreamScheduler:
                     t, float(loss), float(acc), float(m["eta"][j]),
                     int((s > 0).sum()), s, ev if t == tau else ""))
             tau = end
-        self._next_tau = stop
+        st.next_tau = stop
         return self.history
+
+    # -- checkpoint / resume ---------------------------------------------------
+    def engine_config(self) -> dict:
+        """The geometry/hyperparameters needed to rebuild the engine on
+        restore (the loss/task callables are the caller's to re-supply)."""
+        eng = self.engine
+        return {"local_epochs": eng.E, "batch_size": eng.B,
+                "scheme": eng.scheme, "eta0": eng.eta0,
+                "chunk_size": eng.chunk_size, "agg": eng.agg,
+                "with_metrics": eng.with_metrics,
+                "engine_mode": eng.mode, "capacity": eng.capacity,
+                "max_samples": eng.nmax, "mode": self.mode}
+
+    def save(self, path: str, extra: Optional[dict] = None) -> None:
+        """Persist params + FedState + history + engine config so a killed
+        run resumes round-for-round (checkpoint/io.save_fed_checkpoint)."""
+        from repro.checkpoint.io import save_fed_checkpoint
+        save_fed_checkpoint(
+            path, self.params, self.state.to_dict(),
+            history=history_to_dict(self.history),
+            config=self.engine_config(), extra=extra)
+
+    @classmethod
+    def restore(cls, path: str, *, loss_fn: Optional[Callable] = None,
+                task=None, eval_fn: Optional[Callable] = None,
+                evaluate: Optional[Callable] = None, sharding=None,
+                interpret=None, donate: Optional[bool] = None,
+                **overrides) -> "StreamScheduler":
+        """Rebuild a scheduler from ``save()`` output: the engine is
+        reconstructed from the persisted geometry, every occupied slot is
+        re-admitted from the serialized client data, and the FedState
+        (queue, membership, RNG/key) resumes exactly where it stopped.
+        Only the non-serializable callables (loss_fn/task, eval hooks)
+        must be re-supplied."""
+        from repro.checkpoint.io import load_fed_checkpoint
+        params, state_dict, history, config, _extra = \
+            load_fed_checkpoint(path)
+        state = FedState.from_dict(state_dict)
+        cfg = dict(config)
+        cfg.update(overrides)
+        if task is None and loss_fn is not None and state.clients:
+            from repro.fed.task import ArrayTask
+            task = ArrayTask(loss_fn,
+                             np.asarray(state.clients[0].x).shape[1:])
+        engine = RoundEngine(
+            task=task, clients=[], local_epochs=cfg["local_epochs"],
+            batch_size=cfg["batch_size"], scheme=cfg["scheme"],
+            eta0=cfg["eta0"], chunk_size=cfg["chunk_size"], agg=cfg["agg"],
+            with_metrics=cfg["with_metrics"], capacity=cfg["capacity"],
+            max_samples=cfg["max_samples"], sharding=sharding,
+            interpret=interpret, donate=donate, mode=cfg["engine_mode"])
+        # re-stage every occupied slot (one fused burst; trace CDFs ride
+        # along with each admit)
+        engine.admit_many(sorted(
+            ((slot, state.clients[i])
+             for i, slot in state.slot_of.items()),
+            key=lambda sc: sc[0]))
+        sch = cls(init_params=jax.tree.map(jnp.asarray, params),
+                  engine=engine, state=state, mode=cfg["mode"],
+                  eval_fn=eval_fn, evaluate=evaluate,
+                  history=history_from_dict(history))
+        return sch
+
+
+# -- history (de)serialization -------------------------------------------------
+
+def history_to_dict(history: Sequence[RoundRecord]) -> dict:
+    """Columnar plain-data form of a RoundRecord list (numpy arrays +
+    JSON-able lists) — round-trips exactly through history_from_dict."""
+    R = len(history)
+    cap = len(history[0].s) if R else 0
+    return {
+        "tau": np.asarray([h.tau for h in history], np.int64),
+        "loss": np.asarray([h.loss for h in history], np.float64),
+        "acc": np.asarray([h.acc for h in history], np.float64),
+        "eta": np.asarray([h.eta for h in history], np.float64),
+        "n_active": np.asarray([h.n_active for h in history], np.int64),
+        "s": (np.stack([np.asarray(h.s, np.float32) for h in history])
+              if R else np.zeros((0, cap), np.float32)),
+        "event": [h.event for h in history],
+    }
+
+
+def history_from_dict(d: Optional[dict]) -> List[RoundRecord]:
+    if not d or len(d.get("tau", ())) == 0:
+        return []
+    return [RoundRecord(int(d["tau"][j]), float(d["loss"][j]),
+                        float(d["acc"][j]), float(d["eta"][j]),
+                        int(d["n_active"][j]), np.asarray(d["s"][j]),
+                        str(d["event"][j]))
+            for j in range(len(d["tau"]))]

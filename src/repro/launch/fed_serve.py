@@ -1,0 +1,213 @@
+"""Serve a live federation: timed event traces against a FederationService.
+
+Unlike ``repro.launch.fed_stream`` (which replays a scenario's events
+through blocking ``run()`` calls), this CLI drives the *service* path:
+a worker thread runs scheduler spans continuously while the main thread
+submits ParticipationEvents on a wall-clock schedule — the closest thing
+to production traffic this container can stage.
+
+  PYTHONPATH=src python -m repro.launch.fed_serve --scenario flash-crowd \
+      --rounds 40 --events-per-sec 20
+  PYTHONPATH=src python -m repro.launch.fed_serve --scenario churn \
+      --dump-trace /tmp/churn.jsonl              # write the timed trace
+  PYTHONPATH=src python -m repro.launch.fed_serve --trace /tmp/churn.jsonl
+  PYTHONPATH=src python -m repro.launch.fed_serve --scenario churn \
+      --rounds 20 --snapshot /tmp/ckpt           # checkpoint at the end
+  PYTHONPATH=src python -m repro.launch.fed_serve --resume /tmp/ckpt \
+      --rounds 20                                # ...and pick it back up
+
+Trace format (JSONL): one event per line, the fed/events.py dict schema
+with ndarray fields inlined as ``{"__ndarray__": {"data": [...],
+"dtype": "float32"}}`` plus an optional ``"at"`` (seconds since serve
+start) overriding the ``--events-per-sec`` pacing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def _to_jsonable(obj):
+    if isinstance(obj, np.ndarray):
+        return {"__ndarray__": {"data": obj.tolist(),
+                                "dtype": str(obj.dtype)}}
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, dict):
+        return {k: _to_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_to_jsonable(v) for v in obj]
+    return obj
+
+
+def _from_jsonable(obj):
+    if isinstance(obj, dict):
+        if set(obj) == {"__ndarray__"}:
+            spec = obj["__ndarray__"]
+            return np.asarray(spec["data"], dtype=np.dtype(spec["dtype"]))
+        return {k: _from_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_from_jsonable(v) for v in obj]
+    return obj
+
+
+def dump_trace(events, path: str, *, events_per_sec: float) -> None:
+    """Write a timed JSONL trace: events in (tau, push order), submit
+    times paced at ``events_per_sec``."""
+    from repro.fed.events import event_to_dict
+    with open(path, "w") as f:
+        for j, e in enumerate(sorted(events, key=lambda e: e.tau)):
+            d = _to_jsonable(event_to_dict(e))
+            d["at"] = round(j / events_per_sec, 4)
+            f.write(json.dumps(d) + "\n")
+
+
+def load_trace(path: str):
+    """Read a JSONL trace: [(at_seconds, event), ...] in file order."""
+    from repro.fed.events import event_from_dict
+    out = []
+    with open(path) as f:
+        for j, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            d = _from_jsonable(json.loads(line))
+            at = float(d.pop("at", j * 0.01))
+            out.append((at, event_from_dict(d)))
+    return out
+
+
+def main(argv=None) -> dict:
+    from repro.fed.scenarios import (_paper_eval_fn, build_scheduler,
+                                     make_scenario, summarize_history)
+    from repro.fed.service import FederationService
+    from repro.fed.stream import StreamScheduler
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="flash-crowd",
+                    help="scenario generator for the fleet + event trace")
+    ap.add_argument("--trace", default=None,
+                    help="JSONL event trace to replay (overrides the "
+                         "scenario's own events)")
+    ap.add_argument("--dump-trace", default=None, metavar="PATH",
+                    help="write the scenario's timed trace as JSONL "
+                         "and exit")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="resume a saved checkpoint instead of building "
+                         "a fresh scheduler")
+    ap.add_argument("--snapshot", default=None, metavar="DIR",
+                    help="write a resumable checkpoint when serving ends")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="serve until this round (default: scenario's)")
+    ap.add_argument("--span-rounds", type=int, default=4,
+                    help="rounds per worker span between ingest polls")
+    ap.add_argument("--eval-every", type=int, default=None)
+    ap.add_argument("--events-per-sec", type=float, default=50.0,
+                    help="submission pacing for scenario traces")
+    ap.add_argument("--max-pending", type=int, default=256,
+                    help="inbox bound (backpressure threshold)")
+    ap.add_argument("--mode", default=None, choices=["device", "plan"],
+                    help="sampling mode (default: device; with --resume "
+                         "the checkpoint's own mode unless given "
+                         "explicitly — overriding it breaks exact resume)")
+    ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None,
+                    help="also write the summary to this path")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    sc = make_scenario(args.scenario, seed=args.seed)
+    if args.dump_trace:
+        dump_trace(sc.events, args.dump_trace,
+                   events_per_sec=args.events_per_sec)
+        if not args.quiet:
+            print(f"# wrote {len(sc.events)} events to {args.dump_trace}")
+        return {"trace": args.dump_trace, "events": len(sc.events)}
+
+    rounds = args.rounds if args.rounds is not None else sc.n_rounds
+    eval_every = (args.eval_every if args.eval_every is not None
+                  else sc.eval_every)
+
+    if args.resume:
+        # the checkpoint's own mode unless --mode was given explicitly
+        overrides = {} if args.mode is None else {"mode": args.mode}
+        sch = StreamScheduler.restore(
+            args.resume, loss_fn=_make_loss(), eval_fn=_paper_eval_fn(),
+            **overrides)
+        rounds = sch._next_tau + rounds   # serve this many MORE rounds
+        timed = []
+    elif args.trace:
+        sch = build_scheduler(
+            _strip_events(sc), mode=args.mode or "device",
+            chunk_size=args.chunk_size)
+        timed = load_trace(args.trace)
+    else:
+        sch = build_scheduler(
+            _strip_events(sc), mode=args.mode or "device",
+            chunk_size=args.chunk_size)
+        timed = [(j / args.events_per_sec, e) for j, e in
+                 enumerate(sorted(sc.events, key=lambda e: e.tau))]
+    start_tau = sch._next_tau             # 0 fresh; checkpoint tau resumed
+
+    svc = FederationService(sch, span_rounds=args.span_rounds,
+                            eval_every=eval_every, max_rounds=rounds,
+                            max_pending=args.max_pending)
+    t0 = time.perf_counter()
+    with svc:
+        for at, e in timed:               # the main thread is the client
+            delay = at - (time.perf_counter() - t0)
+            if delay > 0:
+                time.sleep(delay)
+            svc.submit(e)
+        svc.drain()
+        svc.wait_rounds(rounds, timeout=600)
+        if args.snapshot:
+            svc.snapshot(args.snapshot)
+    wall = time.perf_counter() - t0
+
+    served = sch._next_tau - start_tau    # this invocation's rounds only
+    summary = summarize_history(sch.history)
+    summary.update(scenario=sc.name, wall_s=round(wall, 3),
+                   rounds_served=served,
+                   rounds_per_sec=round(served / wall, 2),
+                   **{k: v for k, v in svc.stats().items()
+                      if k not in ("running", "paused")})
+    if not args.quiet:
+        print(f"# served {served} rounds in {wall:.2f}s "
+              f"({summary['rounds_per_sec']} rounds/s), "
+              f"{svc.events_ingested} events ingested live")
+        for k in ("evals", "final_loss", "final_acc", "mean_active",
+                  "events_submitted", "events_applied", "spans_run"):
+            print(f"{k},{summary[k]}")
+        if args.snapshot:
+            print(f"# checkpoint written to {args.snapshot}")
+    if args.json:
+        payload = {k: v for k, v in summary.items() if k != "events"}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return summary
+
+
+def _make_loss():
+    from repro.configs.paper import SYNTHETIC_LR
+    from repro.models.small import make_loss_fn
+    return make_loss_fn(SYNTHETIC_LR)
+
+
+def _strip_events(sc):
+    """The service submits the trace live — the scheduler must not also
+    preload the scenario's events."""
+    import dataclasses
+    return dataclasses.replace(sc, events=[])
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

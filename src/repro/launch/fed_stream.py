@@ -28,26 +28,66 @@ def main(argv=None) -> dict:
     ap.add_argument("--rounds", type=int, default=None,
                     help="override the scenario's round count")
     ap.add_argument("--eval-every", type=int, default=None)
-    ap.add_argument("--mode", default="device", choices=["device", "plan"])
+    ap.add_argument("--mode", default=None, choices=["device", "plan"],
+                    help="sampling mode (default: device; with --restore "
+                         "the checkpoint's own mode unless given "
+                         "explicitly — overriding it breaks exact resume)")
     ap.add_argument("--chunk-size", type=int, default=16)
     ap.add_argument("--json", default=None,
                     help="also write the summary to this path")
+    ap.add_argument("--save-state", default=None, metavar="DIR",
+                    help="write a resumable checkpoint (params + FedState "
+                         "+ history) when the run ends")
+    ap.add_argument("--restore", default=None, metavar="DIR",
+                    help="resume a --save-state checkpoint and run "
+                         "--rounds more rounds")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
     sc = make_scenario(args.scenario, seed=args.seed)
     t0 = time.perf_counter()
-    sch, summary = run_scenario(sc, mode=args.mode,
-                                n_rounds=args.rounds,
-                                eval_every=args.eval_every,
-                                chunk_size=args.chunk_size)
+    if args.restore:
+        from repro.configs.paper import SYNTHETIC_LR
+        from repro.fed.scenarios import _paper_eval_fn, summarize_history
+        from repro.fed.stream import StreamScheduler
+        from repro.models.small import make_loss_fn
+        # the checkpoint's own mode unless --mode was given explicitly
+        # (argparse's default must not silently flip a plan checkpoint
+        # to device sampling — that would break exact resume)
+        overrides = {} if args.mode is None else {"mode": args.mode}
+        sch = StreamScheduler.restore(args.restore,
+                                      loss_fn=make_loss_fn(SYNTHETIC_LR),
+                                      eval_fn=_paper_eval_fn(),
+                                      **overrides)
+        resumed_from = sch._next_tau
+        sch.run(args.rounds if args.rounds is not None else sc.n_rounds,
+                eval_every=(args.eval_every if args.eval_every is not None
+                            else sc.eval_every))
+        summary = summarize_history(sch.history)
+        summary.update(scenario=sc.name, events_applied=sch.events_applied,
+                       capacity=sch.engine.capacity,
+                       clients_end=len(sch.clients),
+                       resumed_from=resumed_from)
+        rounds_ran = sch._next_tau - resumed_from
+    else:
+        sch, summary = run_scenario(sc, mode=args.mode or "device",
+                                    n_rounds=args.rounds,
+                                    eval_every=args.eval_every,
+                                    chunk_size=args.chunk_size)
+        rounds_ran = summary["rounds"]
     wall = time.perf_counter() - t0
+    if args.save_state:
+        sch.save(args.save_state)
+        if not args.quiet:
+            print(f"# resumable checkpoint written to {args.save_state}")
     summary["wall_s"] = round(wall, 3)
-    summary["rounds_per_sec"] = round(summary["rounds"] / wall, 2)
+    # rounds run THIS invocation (a resumed history also holds the
+    # pre-checkpoint rounds, which this wall clock never paid for)
+    summary["rounds_per_sec"] = round(rounds_ran / wall, 2)
 
     if not args.quiet:
         print(f"# scenario {sc.name} ({sc.notes}), seed {sc.seed}, "
-              f"mode {args.mode}")
+              f"mode {sch.mode}")
         print("tau,loss,acc,eta,n_active,event")
         for h in sch.history:
             if h.event or not (h.loss != h.loss):   # event or evaluated

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.attention import NEG_INF, causal_attention, _mask_bias
-from repro.models.common import rmsnorm
+from repro.models.common import rmsnorm, safe_concat
 from repro.models.rotary import apply_rope
 from repro.models.sharding import BATCH, constrain
 
@@ -79,11 +79,15 @@ def mla_attention(p, x, cfg, positions, cache=None, decode=False):
         # decompressed path
         k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, cfg.qk_nope_dim)
         v = (c_kv @ p["w_uv"]).reshape(B, S, H, cfg.v_head_dim)
-        k = jnp.concatenate(
+        # safe_concat: k_nope/q_nope are 'model'-sharded on the head dim
+        # while the rope pieces come off replicated projections — the
+        # mixed-sharding concatenate GSPMD miscompiles (same pattern as
+        # the SSD xBC fix; see models/common.safe_concat)
+        k = safe_concat(
             [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
                                       (B, S, H, k_rope.shape[-1]))],
             axis=-1)
-        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q = safe_concat([q_nope, q_rope], axis=-1)
         q = constrain(q, P(BATCH, None, "model", None))
         k = constrain(k, P(BATCH, None, "model", None))
         v = constrain(v, P(BATCH, None, "model", None))

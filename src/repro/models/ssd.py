@@ -143,7 +143,10 @@ def mamba_mixer(p, u, cfg, cache=None, decode=False):
         conv_state = cache["conv"]  # (Bb, K-1, Cc)
         y_conv = (jnp.einsum("bkc,kc->bc", conv_state, p["conv_w"][: K - 1])
                   + xBC[:, 0] * p["conv_w"][K - 1] + p["conv_b"])
-        new_conv = jnp.concatenate([conv_state[:, 1:], xBC], axis=1)
+        # safe_concat: the rolling conv cache is replicated while xBC
+        # carries the in-proj's 'model' sharding — same mixed-sharding
+        # concatenate pattern as the xBC projection above
+        new_conv = safe_concat([conv_state[:, 1:], xBC], axis=1)
         xBC_act = jax.nn.silu(y_conv)[:, None, :]      # (Bb,1,Cc)
         x, B_, C_ = jnp.split(xBC_act, [d_in, d_in + G * N], axis=-1)
         y, h = ssd_decode_step(

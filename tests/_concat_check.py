@@ -1,0 +1,116 @@
+"""Subprocess body for tests/test_safe_concat.py (the concat audit under a
+real multi-device mesh) — same harness pattern as tests/_sharded_check.py:
+XLA_FLAGS must virtualize devices before jax initializes, so the checks
+run in a fresh interpreter and report a ``RESULT {json}`` line on success.
+
+Background: this jax/XLA's GSPMD partitioner miscompiles ``concatenate``
+when the operands carry different shardings and the concatenated dim's
+shard boundary does not align with the piece boundaries (wrong *values*,
+observed max err ~4.5 — see models/common.safe_concat).  PR 4 fixed the
+SSD mixer's xBC projection; the ROADMAP concat audit flagged MLA's q/k
+rope concats and the decode-path conv cache concat as the same shape.
+Those now route through safe_concat; this check pins the sharded paths to
+the single-device reference values:
+
+  1. MLA prefill + absorbed decode (deepseek-v2-lite reduced) on a
+     (data=1, model=4) mesh with 'model'-sharded params == replicated
+     no-mesh run;
+  2. SSD prefill + conv-cache decode (mamba2-130m reduced), same mesh;
+  3. safe_concat == concatenate on mixed-sharded operands directly (the
+     micro-reproducer of the underlying bug shape).
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import json  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.models import transformer  # noqa: E402
+from repro.models.common import safe_concat  # noqa: E402
+from repro.models.params import init_params  # noqa: E402
+from repro.models.sharding import (named_sharding,  # noqa: E402
+                                   tree_param_specs, use_mesh)
+
+RESULTS = {}
+KEY = jax.random.PRNGKey(0)
+
+
+def _decode_trace(cfg, params, tokens, mesh=None):
+    """Prefill most of the prompt, then step-decode the tail; returns the
+    stacked decode logits.  With a mesh, params are placed per the model's
+    partition specs and the forward runs under use_mesh."""
+    B, S = tokens.shape[0], tokens.shape[1]
+    Sp = S - 3
+
+    def run():
+        cache = transformer.init_cache(cfg, B, S)
+        lg, cache = transformer.prefill(params, cfg, tokens[:, :Sp], cache)
+        outs = [lg]
+        for t in range(Sp, S):
+            lg, cache = transformer.decode_step(params, cfg, cache,
+                                                tokens[:, t:t + 1],
+                                                jnp.int32(t))
+            outs.append(lg)
+        return np.stack([np.asarray(o[:, 0]) for o in outs])
+
+    if mesh is None:
+        return run()
+    with use_mesh(mesh):
+        return run()
+
+
+def check_arch(arch: str, mesh) -> float:
+    cfg = get_config(arch).reduced()
+    params = init_params(KEY, cfg)
+    tokens = jax.random.randint(KEY, (2, 24), 0, cfg.vocab)
+    want = _decode_trace(cfg, params, tokens)            # replicated ref
+    specs = tree_param_specs(params, fsdp=False)         # pure TP
+    sharded = jax.tree.map(
+        lambda l, s: jax.device_put(l, named_sharding(mesh, s)),
+        params, specs)
+    got = _decode_trace(cfg, sharded, tokens, mesh=mesh)
+    err = float(np.abs(got - want).max())
+    RESULTS[f"{arch}_prefill_decode_err"] = err
+    assert err < 1e-4, f"{arch} sharded prefill/decode diverges: {err}"
+    return err
+
+
+def check_safe_concat_micro(mesh):
+    """The raw bug shape: a 'model'-sharded (…, 512) piece next to
+    replicated narrow pieces, concatenated on the sharded dim.
+    safe_concat must equal the unsharded numpy concat."""
+    a = jax.random.normal(KEY, (4, 512))
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (4, 16))
+    c = jax.random.normal(jax.random.fold_in(KEY, 2), (4, 16))
+    want = np.concatenate([np.asarray(a), np.asarray(b), np.asarray(c)],
+                          axis=-1)
+    a_sh = jax.device_put(a, NamedSharding(mesh, P(None, "model")))
+    b_r = jax.device_put(b, NamedSharding(mesh, P()))
+    c_r = jax.device_put(c, NamedSharding(mesh, P()))
+    got = np.asarray(jax.jit(lambda *xs: safe_concat(list(xs), -1))(
+        a_sh, b_r, c_r))
+    err = float(np.abs(got - want).max())
+    RESULTS["safe_concat_micro_err"] = err
+    assert err < 1e-6, f"safe_concat diverges on the bug shape: {err}"
+
+
+def main():
+    n_dev = len(jax.devices())
+    assert n_dev == 4, f"expected 4 virtual devices, got {n_dev}"
+    mesh = jax.make_mesh((1, 4), ("data", "model"))
+    check_safe_concat_micro(mesh)
+    check_arch("deepseek-v2-lite-16b", mesh)   # MLA q/k rope concats
+    check_arch("mamba2-130m", mesh)            # SSD conv-cache concat
+    RESULTS["n_devices"] = n_dev
+    print("RESULT " + json.dumps(RESULTS))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,203 @@
+"""Mid-stream checkpoint/resume: the event-sourced control plane round-
+trips through disk and the restored run replays the remaining rounds
+bit-for-bit.
+
+The acceptance-critical property pinned here: a streamed run killed
+mid-stream (pending events still queued — including an Arrival carrying a
+brand-new client's data) and restored from disk produces round-for-round
+identical RoundRecord history and max|param diff| < 1e-6 versus the same
+run never interrupted, in BOTH sampling modes.  The uninterrupted
+baseline runs its rounds in ONE run() call while the checkpointed run is
+cut in half — so the test also pins the stronger invariance the design
+rests on: per-round randomness never depends on span/chunk structure
+(device mode folds the round index into a never-split base key; plan mode
+draws host RNG per round in tau order).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper import SYNTHETIC_LR
+from repro.core.participation import TRACES
+from repro.data import synthetic_federation
+from repro.fed import (Arrival, Client, Departure, FedState,
+                       InactivityBurst, StreamScheduler, TraceShift)
+from repro.fed.stream import history_from_dict, history_to_dict
+from repro.models.small import init_small, logits_small, make_loss_fn
+
+CFG = SYNTHETIC_LR
+
+
+def eval_fn(params, x, y):
+    lg = logits_small(params, CFG, x)
+    ll = jax.nn.log_softmax(lg)
+    loss = -jnp.mean(jnp.take_along_axis(
+        ll, y[:, None].astype(jnp.int32), axis=1))
+    acc = jnp.mean((jnp.argmax(lg, -1) == y).astype(jnp.float32))
+    return float(loss), float(acc)
+
+
+def make_clients(n=6, seed=0, trace_idx=None):
+    train, test = synthetic_federation(0.5, 0.5, n, seed=seed)
+    rng = np.random.default_rng(seed)
+    return [Client(x=tr[0], y=tr[1],
+                   trace=TRACES[trace_idx if trace_idx is not None
+                                else rng.integers(0, 8)],
+                   x_test=te[0], y_test=te[1])
+            for tr, te in zip(train, test)]
+
+
+def make_scheduler(mode, seed=0):
+    """A run with every event type: an early trace shift and burst, a
+    departure freeing a slot, and — crucially — events still PENDING at
+    the checkpoint round (an Arrival with brand-new client data at tau=8
+    and a departure at tau=10, both past the tau=6 cut)."""
+    newcomer = make_clients(1, seed=seed + 500)[0]
+    return StreamScheduler(
+        clients=make_clients(6, seed=seed),
+        init_params=init_small(jax.random.PRNGKey(0), CFG),
+        loss_fn=make_loss_fn(CFG), eval_fn=eval_fn, capacity=8,
+        max_samples=600, local_epochs=5, batch_size=6, scheme="C",
+        eta0=1.0, seed=seed, mode=mode, chunk_size=4,
+        events=[TraceShift(2, client_id=0, trace=TRACES[1]),
+                InactivityBurst(3, 2, (1, 2)),
+                Departure(5, client_id=3, policy="exclude"),
+                Arrival(8, client=newcomer),
+                Departure(10, client_id=1, policy="include")])
+
+
+def assert_history_identical(h1, h2):
+    assert len(h1) == len(h2)
+    for r1, r2 in zip(h1, h2):
+        assert r1.tau == r2.tau
+        np.testing.assert_array_equal(r1.s, r2.s)
+        assert r1.eta == r2.eta
+        assert r1.event == r2.event
+        assert r1.n_active == r2.n_active
+        assert np.isnan(r1.loss) == np.isnan(r2.loss)
+        if np.isfinite(r1.loss):
+            assert r1.loss == r2.loss and r1.acc == r2.acc
+
+
+def max_param_diff(p1, p2):
+    return max(float(np.abs(np.asarray(a, np.float32)
+                            - np.asarray(b, np.float32)).max())
+               for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+
+
+@pytest.mark.parametrize("mode", ["device", "plan"])
+def test_resume_parity_mid_stream(mode, tmp_path):
+    """Kill at tau=6 (Arrival at 8 + Departure at 10 still queued),
+    restore from disk, run the remaining rounds: history bit-identical,
+    params < 1e-6, versus one uninterrupted 12-round run."""
+    baseline = make_scheduler(mode)
+    baseline.run(12, eval_every=4)            # one uncut run
+
+    sch = make_scheduler(mode)
+    sch.run(6, eval_every=4)
+    assert sch.pending == 2                   # events still queued at kill
+    ckpt = str(tmp_path / "ckpt")
+    sch.save(ckpt)
+    del sch                                   # "crash"
+
+    res = StreamScheduler.restore(ckpt, loss_fn=make_loss_fn(CFG),
+                                  eval_fn=eval_fn)
+    assert res.mode == mode and res._next_tau == 6
+    assert res.pending == 2                   # the queue survived the disk
+    res.run(6, eval_every=4)
+
+    assert_history_identical(baseline.history, res.history)
+    diff = max_param_diff(baseline.params, res.params)
+    assert diff < 1e-6, f"resume diverged: max|param diff| = {diff}"
+    # control-plane state converged too
+    assert res.objective == baseline.objective
+    assert res.slot_of == baseline.slot_of
+    assert res.departed == baseline.departed
+    assert res.lr_shift_tau == baseline.lr_shift_tau
+    assert res.events_applied == baseline.events_applied
+
+
+def test_run_call_structure_invariance():
+    """The same rounds cut into different run() calls produce the same
+    trajectory — the invariance resume parity rests on (device mode:
+    never-split base key + per-round fold; plan mode: per-round host
+    draws in tau order)."""
+    for mode in ("device", "plan"):
+        a = make_scheduler(mode)
+        a.run(12, eval_every=4)
+        b = make_scheduler(mode)
+        for n in (1, 4, 2, 5):
+            b.run(n, eval_every=4)
+        assert_history_identical(a.history, b.history)
+        assert max_param_diff(a.params, b.params) == 0.0
+
+
+def test_fedstate_dict_roundtrip():
+    """FedState.to_dict/from_dict is exact: membership, slot registry,
+    queue (with a brand-new Arrival client payload), reboot arrays, RNG
+    stream and key all survive."""
+    sch = make_scheduler("plan")
+    sch.run(6, eval_every=4)
+    st = sch.state
+    d = st.to_dict()
+    st2 = FedState.from_dict(d)
+    assert st2.objective == st.objective
+    assert st2.slot_of == st.slot_of
+    assert st2.client_at == st.client_at
+    assert sorted(st2.free_slots) == sorted(st.free_slots)
+    assert st2.joined == st.joined
+    assert st2.departed == st.departed
+    assert st2.mask_until == st.mask_until
+    assert st2.expiry_taus == st.expiry_taus
+    assert st2.lr_shift_tau == st.lr_shift_tau
+    assert st2.next_tau == st.next_tau
+    assert st2.seq == st.seq
+    assert st2.events_applied == st.events_applied
+    np.testing.assert_array_equal(st2.rb_tau0, st.rb_tau0)
+    np.testing.assert_array_equal(st2.rb_boost, st.rb_boost)
+    np.testing.assert_array_equal(np.asarray(st2.key), np.asarray(st.key))
+    # identical future RNG stream (state copied, not reseeded)
+    np.testing.assert_array_equal(st2.rng.integers(0, 1 << 30, 16),
+                                  st.rng.integers(0, 1 << 30, 16))
+    # pending events round-trip including the new client's data arrays
+    assert st2.pending == st.pending
+    evs1 = sorted(st.queue)
+    evs2 = sorted(st2.queue)
+    for (t1, s1, e1), (t2, s2, e2) in zip(evs1, evs2):
+        assert (t1, s1, type(e1)) == (t2, s2, type(e2))
+    arr1 = next(e for _, _, e in evs1 if isinstance(e, Arrival))
+    arr2 = next(e for _, _, e in evs2 if isinstance(e, Arrival))
+    np.testing.assert_array_equal(arr1.client.x, arr2.client.x)
+    assert arr1.client.trace == arr2.client.trace
+    # clients and their traces (shifted at tau=2) round-trip
+    assert len(st2.clients) == len(st.clients)
+    assert st2.clients[0].trace == TRACES[1]
+
+
+def test_history_dict_roundtrip():
+    sch = make_scheduler("plan")
+    sch.run(8, eval_every=3)
+    back = history_from_dict(history_to_dict(sch.history))
+    assert_history_identical(sch.history, back)
+    assert history_from_dict(history_to_dict([])) == []
+
+
+def test_restore_into_service_continues(tmp_path):
+    """A snapshot taken by the service layer restores into a plain
+    scheduler (and vice versa) — the checkpoint format is shared."""
+    from repro.fed.service import FederationService
+    sch = make_scheduler("device")
+    svc = FederationService(sch, span_rounds=3, eval_every=4, max_rounds=6)
+    ckpt = str(tmp_path / "svc_ckpt")
+    with svc:
+        assert svc.wait_rounds(6, timeout=120)
+        svc.snapshot(ckpt)
+    res = StreamScheduler.restore(ckpt, loss_fn=make_loss_fn(CFG),
+                                  eval_fn=eval_fn)
+    assert res._next_tau == 6
+    res.run(6, eval_every=4)
+    baseline = make_scheduler("device")
+    baseline.run(12, eval_every=4)
+    assert_history_identical(baseline.history, res.history)
+    assert max_param_diff(baseline.params, res.params) < 1e-6

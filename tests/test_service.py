@@ -1,0 +1,138 @@
+"""FederationService: concurrent ingestion while spans run, backpressure,
+pause/drain/snapshot, and the live-vs-preloaded equivalence that makes
+the service layer a faithful transport for the event stream."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper import SYNTHETIC_LR
+from repro.core.participation import TRACES
+from repro.data import synthetic_federation
+from repro.fed import (Arrival, Client, Departure, FederationService,
+                       StreamScheduler, TraceShift)
+from repro.models.small import init_small, make_loss_fn
+
+CFG = SYNTHETIC_LR
+
+
+def make_clients(n=4, seed=0, trace_idx=0):
+    train, test = synthetic_federation(0.5, 0.5, n, seed=seed)
+    return [Client(x=tr[0], y=tr[1], trace=TRACES[trace_idx],
+                   x_test=te[0], y_test=te[1])
+            for tr, te in zip(train, test)]
+
+
+def make_scheduler(seed=0, capacity=6):
+    return StreamScheduler(
+        clients=make_clients(4, seed=seed),
+        init_params=init_small(jax.random.PRNGKey(0), CFG),
+        loss_fn=make_loss_fn(CFG), capacity=capacity, max_samples=600,
+        local_epochs=5, batch_size=6, scheme="C", eta0=1.0, seed=seed,
+        mode="device", chunk_size=4)
+
+
+def test_concurrent_ingestion_applies_events():
+    """Events submitted WHILE the worker trains land on the scheduler and
+    take effect (the serve.py gap, closed): the main thread is the
+    traffic source, the worker never stops spanning."""
+    sch = make_scheduler()
+    svc = FederationService(sch, span_rounds=2, eval_every=1 << 30,
+                            max_rounds=None)
+    newcomer = make_clients(1, seed=99)[0]
+    with svc:
+        assert svc.wait_rounds(4, timeout=120)
+        # late news (tau=0 already passed): applies at the next boundary
+        assert svc.submit(Arrival(0, client=newcomer))
+        assert svc.submit(TraceShift(0, client_id=0, trace=TRACES[4]))
+        assert svc.drain(timeout=120)
+        assert svc.wait_rounds(sch._next_tau + 6, timeout=240)
+    assert svc.events_ingested == 2
+    assert sch.events_applied == 2
+    assert 4 in sch.objective                # newcomer admitted + joined
+    slot = sch.slot_of[4]
+    assert any(h.s[slot] > 0 for h in sch.history)  # and it trained
+    assert sch._next_tau >= 10
+
+
+def test_backpressure_bounded_inbox():
+    sch = make_scheduler()
+    svc = FederationService(sch, span_rounds=2, max_pending=2)
+    # not started: nothing drains the inbox
+    assert svc.submit(TraceShift(1, 0, TRACES[1]), block=False)
+    assert svc.submit(TraceShift(2, 0, TRACES[2]), block=False)
+    assert not svc.submit(TraceShift(3, 0, TRACES[3]), block=False)
+    assert svc.events_submitted == 2
+    assert not svc.submit(TraceShift(3, 0, TRACES[3]), timeout=0.05)
+
+
+def test_pause_resume_and_drain():
+    sch = make_scheduler()
+    svc = FederationService(sch, span_rounds=2, max_rounds=None)
+    with svc:
+        assert svc.wait_rounds(2, timeout=120)
+        svc.pause()
+        frozen = sch._next_tau
+        svc.submit(TraceShift(0, client_id=1, trace=TRACES[2]))
+        assert svc.drain(timeout=60)         # ingested while paused
+        assert svc.events_ingested == 1
+        time.sleep(0.05)
+        assert sch._next_tau == frozen       # no spans while paused
+        svc.resume()
+        assert svc.wait_rounds(frozen + 2, timeout=120)
+    assert sch.clients[1].trace == TRACES[2]
+
+
+def test_live_stream_matches_preloaded_run():
+    """Feeding a schedule through the service (submitted ahead of their
+    taus) reproduces the same trajectory as preloading the events into a
+    blocking scheduler — the service is pure transport."""
+    newcomer = make_clients(1, seed=7)[0]
+    events = [TraceShift(3, client_id=0, trace=TRACES[2]),
+              Arrival(5, client=make_clients(1, seed=7)[0]),
+              Departure(8, client_id=1, policy="exclude")]
+    pre = make_scheduler()
+    pre.push(TraceShift(3, client_id=0, trace=TRACES[2]),
+             Arrival(5, client=newcomer),
+             Departure(8, client_id=1, policy="exclude"))
+    pre.run(12, eval_every=1 << 30)
+
+    live = make_scheduler()
+    svc = FederationService(live, span_rounds=12, eval_every=1 << 30,
+                            max_rounds=12)
+    svc.submit(*events)                      # before start: deterministic
+    with svc:
+        assert svc.wait_rounds(12, timeout=240)
+    assert len(live.history) == len(pre.history) == 12
+    for r1, r2 in zip(pre.history, live.history):
+        np.testing.assert_array_equal(r1.s, r2.s)
+        assert r1.event == r2.event
+    for a, b in zip(jax.tree.leaves(pre.params),
+                    jax.tree.leaves(live.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_worker_error_surfaces():
+    """A raising span must not hang callers: wait_rounds and stop re-raise
+    from the worker."""
+    sch = make_scheduler(capacity=4)         # no free slots
+    svc = FederationService(sch, span_rounds=2, max_rounds=20)
+    svc.submit(Arrival(0, client=make_clients(1, seed=3)[0]))
+    svc.start()
+    with pytest.raises(RuntimeError, match="worker died"):
+        svc.wait_rounds(20, timeout=120)
+    with pytest.raises(RuntimeError, match="worker died"):
+        svc.stop()
+
+
+def test_stats_shape():
+    sch = make_scheduler()
+    svc = FederationService(sch, span_rounds=4, max_rounds=4)
+    with svc:
+        svc.wait_rounds(4, timeout=120)
+    st = svc.stats()
+    assert st["rounds"] == 4
+    assert st["spans_run"] >= 1
+    assert st["inbox_depth"] == 0
+    assert st["running"] is False

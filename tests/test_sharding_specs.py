@@ -140,3 +140,57 @@ def test_param_bytes_within_hbm():
         shard = 256 if serve_fsdp(cfg) else 16
         per_dev = pb / shard
         assert per_dev < 16e9, (arch, per_dev)
+
+
+def test_sequential_batch_pad_to_divisible(caplog):
+    """Satellite (ROADMAP sequential-mode batch sharding): a ragged batch
+    dim pads to the next multiple of the shard count by wrapping the
+    leading samples — sharded shape divisible, original rows intact in
+    order, padding fraction logged once per shape at trace time — and a
+    divisible batch passes through bit-identically with no padding."""
+    import jax
+    import jax.numpy as jnp
+    import logging
+    from repro.core.fed_step import _constrain_batch, _log_batch_padding
+    from repro.fed.sharding import FedSharding
+
+    mesh = jax.make_mesh((1,), ("data",))
+
+    class ThreeShards(FedSharding):
+        n_shards = 3                      # ragged vs B=10
+
+        def constrain_client(self, x, axis_dim=0):
+            return x                      # 1-device mesh: layout no-op
+
+    fs = ThreeShards(mesh=mesh, axis="data")
+    _log_batch_padding.cache_clear()
+    batch = {"x": jnp.arange(2 * 10 * 4, dtype=jnp.float32
+                             ).reshape(2, 10, 4),
+             "y": jnp.arange(2 * 10).reshape(2, 10)}
+    with caplog.at_level(logging.WARNING,
+                         logger="repro.core.fed_step"):
+        out = _constrain_batch(fs, batch, axis_dim=1)
+    assert out["x"].shape == (2, 12, 4) and out["y"].shape == (2, 12)
+    np.testing.assert_array_equal(np.asarray(out["x"][:, :10]),
+                                  np.asarray(batch["x"]))
+    # wrap-around: padded rows repeat the leading samples
+    np.testing.assert_array_equal(np.asarray(out["x"][:, 10:]),
+                                  np.asarray(batch["x"][:, :2]))
+    msgs = [r.message for r in caplog.records if "ragged" in r.message]
+    assert len(msgs) == 1                 # once per (b, shards) shape,
+    #                                       deduped across the two leaves
+    assert "0.167" in msgs[0]             # logged padding fraction 2/12
+
+    class TwoShards(ThreeShards):
+        n_shards = 2                      # divides B=10
+
+    _log_batch_padding.cache_clear()
+    caplog.clear()
+    with caplog.at_level(logging.WARNING,
+                         logger="repro.core.fed_step"):
+        out2 = _constrain_batch(TwoShards(mesh=mesh, axis="data"),
+                                batch, axis_dim=1)
+    assert out2["x"].shape == (2, 10, 4)
+    np.testing.assert_array_equal(np.asarray(out2["x"]),
+                                  np.asarray(batch["x"]))
+    assert not [r for r in caplog.records if "ragged" in r.message]

@@ -303,3 +303,41 @@ def test_fed_stream_cli(tmp_path):
     assert out.exists()
     assert summary["rounds"] == 6
     assert summary["rounds_per_sec"] > 0
+
+
+# -- eval-set caching (satellite) ---------------------------------------------
+
+def test_evaluate_caches_concat_and_invalidates_on_objective_change():
+    """Satellite fix: evaluate() used to re-concatenate (and re-transfer)
+    every client's test set on every eval round.  The concatenated device
+    arrays are now cached and invalidated only by objective-changing
+    events (arrival / exclude-departure) — an InactivityBurst or rejoin
+    leaves the cache warm."""
+    sch = make_scheduler(make_clients(4, seed=11, trace_idx=0), capacity=6,
+                         max_samples=600)
+    sch.run(2, eval_every=1)
+    x1, y1 = sch._eval_arrays()
+    assert x1 is sch._eval_arrays()[0]               # cache hit: same array
+    n_before = x1.shape[0]
+
+    # membership-neutral event: burst masks but objective is unchanged
+    sch.push(InactivityBurst(2, 1, (1,)))
+    sch.run(2, eval_every=1)
+    assert sch._eval_arrays()[0] is x1               # still warm
+
+    # objective-changing events invalidate: arrival grows the eval set...
+    new_cl = make_clients(1, seed=44, trace_idx=0)[0]
+    sch.push(Arrival(4, client=new_cl))
+    sch.run(2, eval_every=1)
+    x2, y2 = sch._eval_arrays()
+    assert x2 is not x1
+    assert x2.shape[0] == n_before + len(new_cl.x_test)
+    # ...and an exclude-departure shrinks it again
+    sch.push(Departure(6, client_id=0, policy="exclude"))
+    sch.run(2, eval_every=1)
+    x3, _ = sch._eval_arrays()
+    assert x3.shape[0] == x2.shape[0] - len(sch.clients[0].x_test)
+    # cached arrays equal a fresh concatenation over the objective
+    xs = np.concatenate([sch.clients[i].x_test
+                         for i in sorted(sch.objective)])
+    np.testing.assert_array_equal(np.asarray(x3), xs)
