@@ -1,0 +1,171 @@
+"""Robustness benchmark: event-stream fuzz corpus + supervised chaos soak.
+
+Two numbers matter for the chaos-hardened service layer:
+
+  * fuzz throughput — seeded interleavings/sec the invariant fuzzer
+    (fed/fuzz.py) can execute against a pooled warm engine, and whether
+    any seed in the nightly corpus violates an invariant (exact resume,
+    zero recompile, scheme-weight sanity, plan-vs-device parity);
+  * chaos MTTR — a supervised FederationService is run under a fault
+    plan that fires every injector site in ONE run (worker crash, worker
+    hang caught by the watchdog, mid-span scheduler crash, checkpoint
+    write failure, checkpoint corruption, a 256-event stale flood) and
+    must auto-recover with RoundRecord history and final params
+    bit-identical to a fault-free run.  Reported: recoveries, mean/max
+    time-to-recover, rounds recomputed, snapshot failures absorbed.
+
+Merged into BENCH_stream.json (under "fuzz" and "chaos") so the
+robustness trajectory lives next to the streaming numbers.
+
+  PYTHONPATH=src python -m benchmarks.fuzz_bench             # both
+  PYTHONPATH=src python -m benchmarks.run --skip-engine ...  # via run.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+NO_EVAL = 10 ** 9
+
+# The acceptance fault plan: every site fires once, ordered so that the
+# corrupted snapshot is the newest on disk when the next crash recovers
+# (span k: worker fault -> 4 rounds -> save k+1; save 0 is the gen-0 base).
+ACCEPTANCE_FAULTS = [
+    ("worker", 1, "crash", 0, 0.0),
+    ("worker", 4, "hang", 0, 30.0),
+    ("sched_span", 6, "crash", 0, 0.0),
+    ("ckpt_save", 3, "io-error", 0, 0.0),
+    ("ckpt_written", 5, "corrupt", 16, 0.0),
+    ("flood", 2, "flood", 256, 0.0),
+]
+
+
+def _make_clients(n=4, seed=0):
+    from repro.core.participation import TRACES
+    from repro.data import synthetic_federation
+    from repro.fed import Client
+    train, test = synthetic_federation(0.5, 0.5, n, seed=seed)
+    return [Client(x=tr[0], y=tr[1], trace=TRACES[0],
+                   x_test=te[0], y_test=te[1])
+            for tr, te in zip(train, test)]
+
+
+def _make_scheduler(**kw):
+    from repro.configs.paper import SYNTHETIC_LR
+    from repro.fed import StreamScheduler
+    from repro.models.small import init_small, make_loss_fn
+    return StreamScheduler(
+        clients=_make_clients(), init_params=init_small(
+            jax.random.PRNGKey(0), SYNTHETIC_LR),
+        loss_fn=make_loss_fn(SYNTHETIC_LR), capacity=6, max_samples=600,
+        local_epochs=5, batch_size=6, scheme="C", eta0=1.0, seed=0,
+        mode="device", chunk_size=4, **kw)
+
+
+def bench_fuzz(n_seeds=64, seed0=0, check_plan_parity=True):
+    """Run the corpus against one pooled harness; returns timing plus the
+    aggregate from fed.fuzz.run_corpus (raises InvariantViolation on the
+    first seed that breaks an invariant — a red nightly is the point)."""
+    from repro.fed import FuzzHarness, run_corpus
+    t0 = time.perf_counter()
+    harness = FuzzHarness()
+    setup_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    agg = run_corpus(range(seed0, seed0 + n_seeds), harness=harness,
+                     check_plan_parity=check_plan_parity)
+    wall = time.perf_counter() - t0
+    return {
+        "n_seeds": n_seeds,
+        "seed_range": [seed0, seed0 + n_seeds],
+        "check_plan_parity": check_plan_parity,
+        "harness_setup_s": round(setup_s, 2),
+        "wall_s": round(wall, 2),
+        "cases_per_sec": round(n_seeds / wall, 2),
+        "total_rounds": agg["rounds"],
+        "total_kills": agg["kills"],
+        "total_resumes": agg["resumes"],
+        "events_applied": agg["events_applied"],
+        "violations": 0,                  # run_corpus raises otherwise
+    }
+
+
+def bench_chaos(plan_seed=7, rounds=32, verify=True):
+    """The acceptance soak: every fault site fires in one supervised run;
+    optionally verify history + params bit-exact against a clean run."""
+    from repro.fed import Fault, FaultPlan, FederationService
+    from repro.models.small import make_loss_fn
+    from repro.configs.paper import SYNTHETIC_LR
+
+    plan = FaultPlan([Fault(site, at, kind, size=size, seconds=secs)
+                      for site, at, kind, size, secs in ACCEPTANCE_FAULTS],
+                     seed=plan_seed)
+    sch = _make_scheduler(injector=plan)
+    eng = sch.engine
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as d:
+        svc = FederationService(
+            sch, span_rounds=4, max_rounds=rounds, supervise=True,
+            snapshot_dir=d, snapshot_every=1, keep_snapshots=4,
+            backoff0=0.01, span_timeout=2.0, join_timeout=10.0,
+            queue_policy="merge-stale", max_queue=64,
+            engine_factory=lambda: eng,
+            restore_kwargs=dict(loss_fn=make_loss_fn(SYNTHETIC_LR)))
+        with svc:
+            ok = svc.wait_rounds(rounds, timeout=300)
+        report = svc.chaos_report()
+        live = svc.scheduler
+    wall = time.perf_counter() - t0
+    if not ok:
+        raise RuntimeError(f"chaos soak stalled: {report}")
+
+    bitexact = None
+    if verify:
+        ref = _make_scheduler()
+        ref.run(rounds, eval_every=NO_EVAL)
+        bitexact = len(ref.history) == len(live.history)
+        for r1, r2 in zip(ref.history, live.history):
+            bitexact = bitexact and (r1.tau == r2.tau
+                                     and r1.event == r2.event
+                                     and r1.eta == r2.eta
+                                     and np.array_equal(r1.s, r2.s))
+        for a, b in zip(jax.tree.leaves(ref.params),
+                        jax.tree.leaves(live.params)):
+            bitexact = bitexact and np.array_equal(np.asarray(a),
+                                                   np.asarray(b))
+    report.update(plan_seed=plan_seed, rounds=rounds,
+                  wall_s=round(wall, 2), bitexact=bitexact)
+    report["recoveries"] = [
+        {k: (v if k != "cause" else v[:80]) for k, v in r.items()}
+        for r in report["recoveries"]]
+    return report
+
+
+def run(n_seeds=64, plan_seed=7, rounds=32):
+    return {
+        "config": {"backend": jax.default_backend()},
+        "fuzz": bench_fuzz(n_seeds=n_seeds),
+        "chaos": bench_chaos(plan_seed=plan_seed, rounds=rounds),
+    }
+
+
+def main(path="BENCH_stream.json", **kw):
+    res = run(**kw)
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+    merged["fuzz"] = res["fuzz"]
+    merged["chaos"] = res["chaos"]
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2)
+        f.write("\n")
+    return res
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=2))

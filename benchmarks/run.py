@@ -36,6 +36,8 @@ def main() -> None:
                     help="skip the streaming-participation benchmark")
     ap.add_argument("--skip-service", action="store_true",
                     help="skip the concurrent-ingestion service benchmark")
+    ap.add_argument("--skip-fuzz", action="store_true",
+                    help="skip the invariant-fuzzer + chaos-soak benchmark")
     ap.add_argument("--skip-sharded", action="store_true",
                     help="skip the sharded-vs-single engine benchmark")
     ap.add_argument("--skip-fedmodel", action="store_true",
@@ -129,6 +131,22 @@ def main() -> None:
                   "rounds_per_sec_blocking", "service_overhead_fraction",
                   "snapshot_ms", "snapshot_to_disk_ms"):
             print(f"{k},{res[k]}")
+        print(f"# merged into {args.stream_json}")
+        sys.stdout.flush()
+
+    if not args.skip_fuzz:
+        from benchmarks.fuzz_bench import main as fuzz_main
+        n_seeds = 128 if args.full else 48
+        res = fuzz_main(args.stream_json, n_seeds=n_seeds)
+        print("\n# fuzz: metric,value")
+        for k in ("n_seeds", "cases_per_sec", "total_rounds",
+                  "total_kills", "violations"):
+            print(f"{k},{res['fuzz'][k]}")
+        print("# chaos: metric,value")
+        for k in ("n_recoveries", "mttr_mean_s", "mttr_max_s",
+                  "recovered_rounds", "snapshot_failures",
+                  "events_merged", "bitexact"):
+            print(f"{k},{res['chaos'][k]}")
         print(f"# merged into {args.stream_json}")
         sys.stdout.flush()
 

@@ -1,5 +1,7 @@
-from repro.checkpoint.io import (load_checkpoint, load_fed_checkpoint,
-                                 save_checkpoint, save_fed_checkpoint)
+from repro.checkpoint.io import (CorruptCheckpointError, load_checkpoint,
+                                 load_fed_checkpoint, save_checkpoint,
+                                 save_fed_checkpoint)
 
 __all__ = ["save_checkpoint", "load_checkpoint",
-           "save_fed_checkpoint", "load_fed_checkpoint"]
+           "save_fed_checkpoint", "load_fed_checkpoint",
+           "CorruptCheckpointError"]

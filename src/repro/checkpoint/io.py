@@ -13,11 +13,26 @@ Two layers:
     numpy arrays it referenced (stored in the npz under ``blob/...``
     keys) — ``dejsonify_tree`` reassembles them exactly.
 
+Durability contract (the robustness layer, see docs/robustness.md):
+
+  * every write is atomic — payloads land in a ``*.tmp`` sibling, are
+    fsynced, then ``os.replace``d over the canonical name, so a mid-write
+    kill leaves either the previous checkpoint or the new one, never a
+    truncated npz;
+  * the manifest is the commit record: it is written (atomically) *after*
+    the npz and carries that file's SHA-256, which ``load_fed_checkpoint``
+    verifies — torn or bit-rotted checkpoints raise a clear
+    ``CorruptCheckpointError`` instead of an opaque numpy/zip failure;
+  * non-native leaf dtypes (bfloat16 &co. from ml_dtypes) are stored as
+    unsigned-int views with their dtype name recorded in the manifest and
+    restored bit-exactly on load (npz would silently return raw void).
+
 Sharded arrays are gathered to host before save (fine for the simulation
 scale; a production deployment would swap in per-shard writes keyed by
 device index — the manifest format already records the spec strings)."""
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 
@@ -26,6 +41,105 @@ import numpy as np
 
 _ARRAY_KEY = "__npz__"
 _TUPLE_KEY = "__tuple__"
+
+
+class CorruptCheckpointError(RuntimeError):
+    """The on-disk checkpoint is unreadable or fails its manifest
+    checksum (torn write, bitrot, truncation)."""
+
+
+# -- durability helpers --------------------------------------------------------
+
+def _fsync_dir(path: str) -> None:
+    """Best-effort fsync of the containing directory so the rename itself
+    is durable (not available on every platform/filesystem)."""
+    try:
+        fd = os.open(os.path.dirname(os.path.abspath(path)) or ".",
+                     os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _atomic_savez(path: str, arrays: dict, injector=None) -> str:
+    """Write an npz atomically (tmp + fsync + os.replace) and return its
+    SHA-256.  ``injector`` is the fault-injection hook (fed/faults.py):
+    an injected write failure raises after the payload was staged but
+    before the rename — the canonical file is never torn."""
+    tmp = path + ".tmp"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+            if injector is not None:
+                injector.fire("ckpt_save", path=path)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    _fsync_dir(path)
+    return _sha256_file(path)
+
+
+def _atomic_write_text(path: str, text: str) -> None:
+    tmp = path + ".tmp"
+    try:
+        with open(tmp, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    _fsync_dir(path)
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+# -- non-native dtypes (bfloat16 &co.) ----------------------------------------
+
+_UINT_BY_ITEMSIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _encode_arrays(arrays: dict):
+    """npz round-trips native numpy dtypes only; ml_dtypes leaves (e.g.
+    bfloat16 params) come back as raw void.  Store them as unsigned-int
+    views and record the true dtype name for bit-exact decoding."""
+    out, dtypes = {}, {}
+    for k, a in arrays.items():
+        if a.dtype.kind in "biufcSU":
+            out[k] = a
+        else:
+            out[k] = a.view(_UINT_BY_ITEMSIZE[a.dtype.itemsize])
+            dtypes[k] = str(a.dtype)
+    return out, dtypes
+
+
+def _decode_arrays(arrays: dict, dtypes: dict) -> dict:
+    for k, name in (dtypes or {}).items():
+        if k in arrays:
+            try:
+                dt = np.dtype(name)
+            except TypeError:
+                import ml_dtypes  # noqa: F401  (registers bfloat16 &co.)
+                dt = np.dtype(name)
+            arrays[k] = arrays[k].view(dt)
+    return arrays
 
 
 def _flatten(tree, prefix=""):
@@ -101,30 +215,75 @@ def save_checkpoint(path: str, params, step: int = 0, extra: dict = None):
     os.makedirs(path, exist_ok=True)
     flat = _flatten(params)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    np.savez(os.path.join(path, "params.npz"), **arrays)
     manifest = {
         "step": step,
         "keys": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
                  for k, a in arrays.items()},
         "extra": extra or {},
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=2)
+    enc, dtypes = _encode_arrays(arrays)
+    sha = _atomic_savez(os.path.join(path, "params.npz"), enc)
+    manifest["array_dtypes"] = dtypes
+    manifest["npz_sha256"] = sha
+    _atomic_write_text(os.path.join(path, "manifest.json"),
+                       json.dumps(manifest, indent=2))
 
 
-def load_checkpoint(path: str):
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    with np.load(os.path.join(path, "params.npz")) as z:
-        flat = {k: z[k] for k in z.files}
+def load_checkpoint(path: str, verify: bool = True):
+    manifest = _read_manifest(os.path.join(path, "manifest.json"))
+    npz = os.path.join(path, "params.npz")
+    if verify:
+        _verify_npz(npz, manifest)
+    flat = _decode_arrays(_read_npz(npz), manifest.get("array_dtypes"))
     return _unflatten(flat), manifest
+
+
+def _read_manifest(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        raise
+    except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+        raise CorruptCheckpointError(
+            f"unreadable checkpoint manifest {path!r}: {e}") from e
+
+
+def _read_npz(path: str) -> dict:
+    try:
+        with np.load(path) as z:
+            return {k: z[k] for k in z.files}
+    except FileNotFoundError:
+        raise
+    except Exception as e:   # zipfile/npy format errors on torn files
+        raise CorruptCheckpointError(
+            f"unreadable checkpoint payload {path!r}: {e}") from e
+
+
+def _verify_npz(path: str, manifest: dict) -> None:
+    """Checksum gate: a checkpoint whose npz bytes do not match the
+    manifest's recorded SHA-256 is corrupt (manifests written before the
+    checksum era carry no hash and skip the check)."""
+    want = manifest.get("npz_sha256")
+    if want is None:
+        return
+    try:
+        got = _sha256_file(path)
+    except OSError as e:
+        raise CorruptCheckpointError(
+            f"unreadable checkpoint payload {path!r}: {e}") from e
+    if got != want:
+        raise CorruptCheckpointError(
+            f"checkpoint payload {path!r} fails its manifest checksum "
+            f"(expected sha256 {want[:12]}…, got {got[:12]}…): torn "
+            f"write or bitrot — restore from an older snapshot")
 
 
 # -- federation-run checkpoints (params + FedState + history) ------------------
 
 def save_fed_checkpoint(path: str, params, state: dict, *,
                         history: dict = None, config: dict = None,
-                        extra: dict = None) -> None:
+                        extra: dict = None, injector=None) -> None:
     """Persist a federation run's complete restart state.
 
     ``state`` is FedState.to_dict() (plain data + ndarrays; the pending
@@ -133,7 +292,14 @@ def save_fed_checkpoint(path: str, params, state: dict, *,
     dict (fed/stream.history_to_dict); ``config`` the engine geometry
     (StreamScheduler.engine_config).  One npz carries the param leaves
     (``params/...``) plus every extracted state/history array
-    (``blob/...``); the manifest holds the JSON skeletons."""
+    (``blob/...``); the manifest holds the JSON skeletons, the npz
+    SHA-256 and the true dtype of every non-native (bf16) leaf.
+
+    Both files are written atomically (tmp + fsync + rename), npz first —
+    the manifest is the commit record, so a kill at any byte leaves the
+    previous checkpoint loadable.  ``injector`` is the fault hook
+    (fed/faults.py): injected write failures raise before the rename,
+    injected corruption flips bytes after it (caught at load time)."""
     os.makedirs(path, exist_ok=True)
     flat = _flatten(params)
     arrays = {f"params/{k}": np.asarray(jax.device_get(v))
@@ -147,20 +313,33 @@ def save_fed_checkpoint(path: str, params, state: dict, *,
         "extra": extra or {},
         "param_keys": sorted(flat),
     }
-    np.savez(os.path.join(path, "fed_checkpoint.npz"), **arrays)
-    with open(os.path.join(path, "fed_manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=2)
+    enc, dtypes = _encode_arrays(arrays)
+    npz_path = os.path.join(path, "fed_checkpoint.npz")
+    sha = _atomic_savez(npz_path, enc, injector=injector)
+    manifest["array_dtypes"] = dtypes
+    manifest["npz_sha256"] = sha
+    _atomic_write_text(os.path.join(path, "fed_manifest.json"),
+                       json.dumps(manifest, indent=2))
+    if injector is not None:
+        injector.fire("ckpt_written", path=npz_path)
 
 
-def load_fed_checkpoint(path: str):
-    """Returns (params, state_dict, history_dict, config, extra)."""
-    with open(os.path.join(path, "fed_manifest.json")) as f:
-        manifest = json.load(f)
+def load_fed_checkpoint(path: str, verify: bool = True):
+    """Returns (params, state_dict, history_dict, config, extra).
+
+    Raises CorruptCheckpointError when the manifest is unreadable, the
+    npz fails its recorded checksum, or the payload cannot be parsed —
+    callers (the service supervisor) roll back to an older snapshot."""
+    manifest = _read_manifest(os.path.join(path, "fed_manifest.json"))
     if manifest.get("format") != "fed-checkpoint-v1":
-        raise ValueError(f"not a fed checkpoint: {path!r} "
-                         f"({manifest.get('format')!r})")
-    with np.load(os.path.join(path, "fed_checkpoint.npz")) as z:
-        arrays = {k: z[k] for k in z.files}
+        raise CorruptCheckpointError(
+            f"not a fed checkpoint: {path!r} "
+            f"({manifest.get('format')!r})")
+    npz_path = os.path.join(path, "fed_checkpoint.npz")
+    if verify:
+        _verify_npz(npz_path, manifest)
+    arrays = _decode_arrays(_read_npz(npz_path),
+                            manifest.get("array_dtypes"))
     params = _unflatten({k[len("params/"):]: v
                          for k, v in arrays.items()
                          if k.startswith("params/")})

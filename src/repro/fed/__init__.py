@@ -2,6 +2,10 @@ from repro.fed.driver import Client, FederatedTrainer, RoundRecord
 from repro.fed.engine import RoundEngine
 from repro.fed.events import (Arrival, Departure, InactivityBurst,
                               ParticipationEvent, TraceShift)
+from repro.fed.faults import (Fault, FaultPlan, InjectedFault,
+                              InjectedWriteError)
+from repro.fed.fuzz import (FuzzHarness, InvariantViolation, generate_case,
+                            run_corpus, run_fuzz_case)
 from repro.fed.service import FederationService
 from repro.fed.sharding import FedSharding, make_fed_sharding
 from repro.fed.state import FedState
@@ -12,4 +16,7 @@ __all__ = ["Client", "FederatedTrainer", "RoundRecord", "RoundEngine",
            "Arrival", "Departure", "InactivityBurst", "ParticipationEvent",
            "StreamScheduler", "TraceShift", "FedSharding",
            "make_fed_sharding", "ArrayTask", "ClientTask", "LMTask",
-           "FedState", "FederationService"]
+           "FedState", "FederationService", "Fault", "FaultPlan",
+           "InjectedFault", "InjectedWriteError", "FuzzHarness",
+           "InvariantViolation", "generate_case", "run_corpus",
+           "run_fuzz_case"]

@@ -324,6 +324,7 @@ class RoundEngine:
         self.n = self._put_slots(n_arr)
         self.s_cdf = self._put_slots(cdf)
         self._fns = {}
+        self.trace_count = 0      # bumped at chunk trace time (see _get_fn)
         self._pspecs = None
         self._pspecs_built = False
 
@@ -524,6 +525,13 @@ class RoundEngine:
         if sampled:
             def chunk(params, data, n, s_cdf, key, active, taus,
                       p, rb_tau0, rb_boost, lr_shift):
+                # trace-time side effect: the body runs only when jax
+                # (re)traces, so this counts actual compiles — the
+                # zero-recompile invariant's signal (the C++ fastpath
+                # cache also keys on argument committed-ness, so its
+                # _cache_size() over-reports)
+                self.trace_count += 1
+
                 def body(w, tau):
                     # per-round key: the draw for round tau is a pure
                     # function of (base key, tau), invariant to span and
@@ -542,6 +550,8 @@ class RoundEngine:
         else:
             def chunk(params, data, alphas, idxs, taus, p,
                       rb_tau0, rb_boost, lr_shift):
+                self.trace_count += 1
+
                 def body(w, xs):
                     alpha, idx, tau = xs
                     return self._round_core(w, data, alpha, idx,

@@ -1,0 +1,491 @@
+"""Property-based event-stream fuzzer for the federation control plane.
+
+The streaming scheduler promises hard invariants under *any* interleaving
+of participation events — arrivals, departures (include/exclude), rejoins,
+trace shifts, inactivity bursts — with kills and resumes anywhere between
+spans.  This module generates seeded random interleavings and checks the
+promises on every one:
+
+  exact-resume     killing the run at arbitrary span boundaries (in-memory
+                   FedState.to_dict round-trip, the same serialization the
+                   on-disk checkpoints use) and resuming yields a history
+                   and final params **bit-identical** to the uninterrupted
+                   run;
+  zero-recompile   no fuzz case may grow the engine's jit cache after
+                   warm-up: events cost slot writes, never a recompile
+                   (the per-instance `_fns` key set and every function's
+                   tracing-cache size are pinned against a baseline);
+  weight-sanity    every span's membership-derived arguments are lawful —
+                   p >= 0 with total mass in (0, 1] (include-departures
+                   keep their mass in the normalization while holding no
+                   slot), active slots carry positive weight, 0 <= s <= E
+                   with s > 0 only on active slots, the scheme A/B/C
+                   coefficients computed from (p, s) are finite and
+                   non-negative, and eta(t) = eta0 / max(t+1-lr_shift, 1)
+                   for the forward-filled LR-shift round;
+  plan-parity      mode="plan" (host-RNG sampling) walks the identical
+                   control-plane trajectory as mode="device": same event
+                   application log, same eta sequence, same per-span
+                   (p, active, lr_shift), same final membership.  (Epoch
+                   counts s are sample-path quantities drawn from
+                   different RNG streams, so they are *not* compared.)
+
+One warm engine is pooled across all cases (a fresh engine costs seconds
+of XLA compilation; re-staging slots costs milliseconds): each case evicts
+every slot and re-admits its own client set, which is exactly the
+restore-into-warm-engine path the supervised service uses for recovery.
+
+A violation raises InvariantViolation carrying the case seed — re-running
+``run_fuzz_case(harness, seed)`` replays the exact interleaving.
+
+tests/test_fuzz_invariants.py runs a fast corpus in tier-1;
+benchmarks/fuzz_bench.py (``run.py --fuzz``) runs the nightly-size one.
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import scheme_coefficients
+from repro.core.participation import TRACES
+from repro.fed.engine import RoundEngine
+from repro.fed.events import (Arrival, Departure, InactivityBurst,
+                              TraceShift, event_from_dict, event_to_dict)
+from repro.fed.state import FedState
+from repro.fed.stream import StreamScheduler
+
+
+class InvariantViolation(AssertionError):
+    """A fuzz case broke a control-plane invariant.  The message leads
+    with the case seed so the interleaving can be replayed exactly."""
+
+    def __init__(self, seed: int, invariant: str, detail: str):
+        self.seed = seed
+        self.invariant = invariant
+        super().__init__(f"[fuzz seed={seed}] {invariant}: {detail}")
+
+
+# -- case generation -----------------------------------------------------------
+
+@dataclass
+class FuzzCase:
+    """A seeded op program: ("push", event_dict), ("run", n), ("kill",).
+    Events are stored in codec (dict) form so every execution
+    materializes fresh payload objects — TraceShift mutates Client.trace
+    in place, and two runs of one case must never share a Client."""
+    seed: int
+    ops: List[Tuple] = field(default_factory=list)
+    total_rounds: int = 0
+
+    @property
+    def n_kills(self) -> int:
+        return sum(1 for op in self.ops if op[0] == "kill")
+
+
+def generate_case(seed: int, *, n_founding: int = 4, capacity: int = 8,
+                  n_arrival_pool: int = 4, max_ops: int = 14,
+                  max_kills: int = 2) -> FuzzCase:
+    """A random-but-valid interleaving.  A conservative occupancy/
+    membership simulation keeps programs inside the engine's contract:
+    arrivals never exceed free slots (allocated at event *creation*, the
+    pessimistic bound), exclude-departures never drive the objective
+    below two members (data_weights normalizes by total mass), and
+    rejoins pair 1:1 with prior include-departures (the freed slot is
+    reserved for them).  Duplicate deliveries are injected for
+    Departure/TraceShift (idempotent or deterministic on replay);
+    payload-carrying Arrivals are never duplicated — registering the same
+    payload twice is a *second* client by design (docs/robustness.md)."""
+    rng = np.random.default_rng(seed)
+    ops: List[Tuple] = []
+    cursor = 0                       # rounds scheduled so far
+    max_tau = 0                      # largest event tau pushed
+    free = capacity - n_founding     # pessimistic free-slot budget
+    members = set(range(n_founding))           # objective lower bound
+    include_departed: List[int] = []           # rejoinable ids
+    slotted = set(range(n_founding))           # ids that may trace-shift
+    # a TraceShift dereferences clients[i], so it must not apply before
+    # the arrival that registers i: clamp its tau to the arrival's
+    min_tau = {i: 0 for i in range(n_founding)}
+    next_arrival = 0                           # index into arrival pool
+    next_id = n_founding                       # id a new payload will get
+    kills = 0
+    excludes = 0
+
+    def push(e) -> None:
+        nonlocal max_tau
+        max_tau = max(max_tau, e.tau)
+        ops.append(("push", event_to_dict(e)))
+
+    n_ops = int(rng.integers(8, max_ops + 1))
+    for _ in range(n_ops):
+        kind = rng.choice(["run", "arrival", "departure", "rejoin",
+                           "shift", "burst", "kill"],
+                          p=[0.30, 0.13, 0.13, 0.10, 0.14, 0.10, 0.10])
+        tau = cursor + int(rng.integers(0, 4))   # near-future (or stale
+        if rng.random() < 0.2:                   # news for past rounds)
+            tau = max(0, cursor - 1)
+        if kind == "run":
+            n = int(rng.integers(1, 6))
+            ops.append(("run", n))
+            cursor += n
+        elif kind == "arrival" and free > 0 \
+                and next_arrival < n_arrival_pool:
+            push(Arrival(tau, client_id=-(next_arrival + 1)))
+            # negative ids are pool references resolved at execution
+            free -= 1
+            members.add(next_id)
+            slotted.add(next_id)
+            min_tau[next_id] = tau
+            next_arrival += 1
+            next_id += 1
+        elif kind == "departure" and members:
+            i = int(rng.choice(sorted(members)))
+            # the objective only ever shrinks via exclude (include keeps
+            # the mass), so capping total excludes below n_founding - 1
+            # keeps it nonempty under ANY application order — arrivals
+            # pending at the departure boundary must not be counted on
+            if excludes < n_founding - 2 and rng.random() < 0.5:
+                push(Departure(tau, client_id=i, policy="exclude"))
+                members.discard(i)
+                excludes += 1
+            else:
+                push(Departure(tau, client_id=i, policy="include"))
+                members.discard(i)
+                include_departed.append(i)
+            slotted.discard(i)
+            if rng.random() < 0.25:              # duplicate delivery:
+                push(Departure(tau, client_id=i,  # second is a no-op
+                               policy="include"))
+        elif kind == "rejoin" and include_departed:
+            i = include_departed.pop(int(rng.integers(
+                0, len(include_departed))))
+            # tau >= the departure's (same boundary is fine: the heap
+            # pops the earlier-seq departure first, freeing the slot)
+            push(Arrival(max(tau, cursor), client_id=i))
+            members.add(i)
+            slotted.add(i)
+        elif kind == "shift" and slotted:
+            i = int(rng.choice(sorted(slotted)))
+            ev = TraceShift(max(tau, min_tau[i]), client_id=i,
+                            trace=TRACES[int(rng.integers(0, len(TRACES)))])
+            push(ev)
+            if rng.random() < 0.25:              # duplicate delivery:
+                push(ev)                         # deterministic replay
+        elif kind == "burst" and members:
+            ids = tuple(sorted(rng.choice(
+                sorted(members),
+                size=int(rng.integers(1, min(3, len(members)) + 1)),
+                replace=False).tolist()))
+            push(InactivityBurst(tau, duration=int(rng.integers(1, 4)),
+                                 client_ids=ids))
+        elif kind == "kill" and kills < max_kills and ops:
+            ops.append(("kill",))
+            kills += 1
+    # tail run: pass every queued tau so all events actually apply
+    tail = max(4, max_tau + 1 - cursor)
+    ops.append(("run", int(tail)))
+    cursor += tail
+    return FuzzCase(seed=seed, ops=ops, total_rounds=cursor)
+
+
+# -- harness -------------------------------------------------------------------
+
+def _fn_signature(engine: RoundEngine) -> dict:
+    """The recompile fingerprint: the jit key set plus the engine's
+    trace counter (bumped only when jax actually retraces a chunk body).
+    Any growth after warm-up means an event triggered a recompile.
+    Deliberately NOT the jits' _cache_size(): jax's C++ fastpath cache
+    also keys on argument committed-ness and grows without retracing."""
+    return {"keys": sorted(engine._fns.keys()),
+            "traces": engine.trace_count}
+
+
+class FuzzHarness:
+    """Shared fixtures for a fuzz corpus: data pools, one warm pooled
+    engine (both sampled and plan jit variants compiled by the warm-up
+    spans), and the recompile baseline every case is checked against."""
+
+    def __init__(self, *, capacity: int = 8, n_founding: int = 4,
+                 n_arrival_pool: int = 4, local_epochs: int = 3,
+                 batch_size: int = 5, chunk_size: int = 4,
+                 max_samples: int = 60, scheme: str = "C",
+                 eta0: float = 1.0, data_seed: int = 0):
+        from repro.configs.paper import SYNTHETIC_LR
+        from repro.data import synthetic_federation
+        from repro.fed.driver import Client
+        from repro.models.small import init_small, make_loss_fn
+
+        self.capacity = capacity
+        self.n_founding = n_founding
+        self.n_arrival_pool = n_arrival_pool
+        self.E = local_epochs
+        self.scheme = scheme
+        self.eta0 = eta0
+        cfg = SYNTHETIC_LR
+        train, test = synthetic_federation(
+            0.5, 0.5, n_founding + n_arrival_pool, seed=data_seed)
+        clients = [Client(x=tr[0][:max_samples], y=tr[1][:max_samples],
+                          trace=TRACES[j % len(TRACES)],
+                          x_test=te[0], y_test=te[1])
+                   for j, (tr, te) in enumerate(zip(train, test))]
+        self.founding = clients[:n_founding]
+        self.arrival_pool = clients[n_founding:]
+        self.init_params = init_small(jax.random.PRNGKey(0), cfg)
+        self.loss_fn = make_loss_fn(cfg)
+        self.engine = RoundEngine(
+            loss_fn=self.loss_fn, clients=list(self.founding),
+            local_epochs=local_epochs, batch_size=batch_size,
+            scheme=scheme, eta0=eta0, chunk_size=chunk_size,
+            capacity=capacity, max_samples=max_samples)
+        # warm-up: a 7-round span chunks into 4+2+1, compiling every
+        # pow2 chunk length the cases can produce — in both modes
+        for mode in ("device", "plan"):
+            sch = self.new_scheduler(mode)
+            sch.run(7, eval_every=1 << 30)
+        self.fn_baseline = _fn_signature(self.engine)
+
+    def _clone(self, client):
+        from repro.fed.events import client_from_dict, client_to_dict
+        return client_from_dict(client_to_dict(client))
+
+    def new_scheduler(self, mode: str, *, state: Optional[FedState] = None,
+                      params=None, case_seed: int = 0) -> StreamScheduler:
+        """A scheduler over the pooled warm engine: evict every slot,
+        re-stage the case's (or restored state's) occupancy.  Clients are
+        cloned per scheduler — TraceShift mutates Client.trace in place,
+        and runs of one case must stay independent."""
+        eng = self.engine
+        for slot in range(eng.capacity):
+            eng.evict(slot)
+        if state is None:
+            founders = [self._clone(c) for c in self.founding]
+            eng.admit_many(list(enumerate(founders)))
+            return StreamScheduler(
+                clients=founders, init_params=self.init_params,
+                engine=eng, mode=mode, seed=case_seed, log_spans=True)
+        eng.admit_many(sorted(
+            ((slot, state.clients[i])
+             for i, slot in state.slot_of.items()),
+            key=lambda sc: sc[0]))
+        return StreamScheduler(
+            init_params=jax.tree.map(jnp.asarray, params), engine=eng,
+            state=state, mode=mode, log_spans=True)
+
+    def materialize(self, case: FuzzCase) -> List[Tuple]:
+        """Codec dicts -> fresh event objects; negative Arrival ids are
+        resolved to cloned payloads from the arrival pool."""
+        out = []
+        for op in case.ops:
+            if op[0] != "push":
+                out.append(op)
+                continue
+            d = op[1]
+            if d["kind"] == "arrival" and d.get("client_id") is not None \
+                    and d["client_id"] < 0:
+                payload = self._clone(
+                    self.arrival_pool[-d["client_id"] - 1])
+                out.append(("push", Arrival(int(d["tau"]),
+                                            client=payload)))
+            else:
+                out.append(("push", event_from_dict(d)))
+        return out
+
+
+# -- execution -----------------------------------------------------------------
+
+def _execute(harness: FuzzHarness, case: FuzzCase, *, mode: str,
+             honor_kills: bool) -> dict:
+    """Run one materialized op program.  ``honor_kills=True`` serializes
+    the full control plane at every ("kill",) op — the in-memory twin of
+    the on-disk checkpoint — and resumes into a freshly re-staged
+    scheduler; ``False`` ignores kills (the uninterrupted reference)."""
+    sch = harness.new_scheduler(mode, case_seed=case.seed)
+    span_log = list(sch.span_log or [])
+    n_resumes = 0
+    for op in harness.materialize(case):
+        if op[0] == "push":
+            sch.push(op[1])
+        elif op[0] == "run":
+            sch.run(op[1], eval_every=1 << 30)
+        elif op[0] == "kill" and honor_kills:
+            span_log.extend(sch.span_log)
+            blob = copy.deepcopy(sch.state.to_dict())
+            params = jax.tree.map(lambda a: np.asarray(a).copy(),
+                                  sch.params)
+            history = list(sch.history)
+            sch = harness.new_scheduler(
+                mode, state=FedState.from_dict(blob), params=params)
+            sch.history.extend(history)
+            n_resumes += 1
+    span_log.extend(sch.span_log)
+    return {"history": sch.history,
+            "params": jax.tree.map(np.asarray, sch.params),
+            "span_log": span_log,
+            "state": sch.state,
+            "n_resumes": n_resumes}
+
+
+# -- invariants ----------------------------------------------------------------
+
+def _check_exact_resume(seed: int, ref: dict, killed: dict) -> None:
+    h1, h2 = ref["history"], killed["history"]
+    if len(h1) != len(h2):
+        raise InvariantViolation(seed, "exact-resume",
+                                 f"history length {len(h2)} != {len(h1)}")
+    for r1, r2 in zip(h1, h2):
+        if (r1.tau != r2.tau or r1.event != r2.event
+                or r1.eta != r2.eta or r1.n_active != r2.n_active
+                or not np.array_equal(np.asarray(r1.s),
+                                      np.asarray(r2.s))):
+            raise InvariantViolation(
+                seed, "exact-resume",
+                f"round {r1.tau}: {r1} != {r2}")
+    for a, b in zip(jax.tree.leaves(ref["params"]),
+                    jax.tree.leaves(killed["params"])):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise InvariantViolation(
+                seed, "exact-resume",
+                f"final params differ (max |d|="
+                f"{np.max(np.abs(np.asarray(a) - np.asarray(b)))})")
+
+
+def _check_zero_recompile(seed: int, harness: FuzzHarness) -> None:
+    sig = _fn_signature(harness.engine)
+    if sig != harness.fn_baseline:
+        raise InvariantViolation(
+            seed, "zero-recompile",
+            f"jit cache grew: baseline {harness.fn_baseline} -> {sig}")
+
+
+def _check_weight_sanity(seed: int, harness: FuzzHarness,
+                         result: dict) -> None:
+    E, eta0, scheme = harness.E, harness.eta0, harness.scheme
+    log = sorted(result["span_log"], key=lambda t: t[0])
+    if not log:
+        raise InvariantViolation(seed, "weight-sanity", "empty span log")
+    j = 0
+    for rec in result["history"]:
+        while j + 1 < len(log) and log[j + 1][0] <= rec.tau:
+            j += 1
+        tau0, p, active, lr_shift = log[j]
+        # sum(p) <= 1 with the deficit owned by include-departed members
+        # (mass in the normalization, no slot); sum(p) == 0 is the
+        # everyone-include-departed state, lawful only with nobody active
+        # (covered by the active&p<=0 check below)
+        if np.any(p < 0) or p.sum() > 1.0 + 1e-5:
+            raise InvariantViolation(
+                seed, "weight-sanity",
+                f"round {rec.tau}: p={p} (sum={p.sum()})")
+        if np.any((active > 0) & (p <= 0)):
+            raise InvariantViolation(
+                seed, "weight-sanity",
+                f"round {rec.tau}: active slot with zero weight "
+                f"(p={p}, active={active})")
+        s = np.asarray(rec.s)
+        if np.any(s < 0) or np.any(s > E):
+            raise InvariantViolation(
+                seed, "weight-sanity",
+                f"round {rec.tau}: s={s} outside [0, {E}]")
+        if np.any((s > 0) & (active == 0)):
+            raise InvariantViolation(
+                seed, "weight-sanity",
+                f"round {rec.tau}: inactive slot trained (s={s}, "
+                f"active={active})")
+        coeffs = np.asarray(scheme_coefficients(scheme, p, s, E))
+        if np.any(~np.isfinite(coeffs)) or np.any(coeffs < 0):
+            raise InvariantViolation(
+                seed, "weight-sanity",
+                f"round {rec.tau}: scheme-{scheme} coefficients "
+                f"{coeffs} not finite/non-negative")
+        want_eta = eta0 / max(rec.tau + 1 - lr_shift, 1)
+        if abs(rec.eta - want_eta) > 1e-6 * max(1.0, want_eta):
+            raise InvariantViolation(
+                seed, "weight-sanity",
+                f"round {rec.tau}: eta={rec.eta} != "
+                f"eta0/max(t+1-{lr_shift},1)={want_eta}")
+
+
+def _check_plan_parity(seed: int, device: dict, plan: dict) -> None:
+    h1, h2 = device["history"], plan["history"]
+    if len(h1) != len(h2):
+        raise InvariantViolation(seed, "plan-parity",
+                                 f"history length {len(h2)} != {len(h1)}")
+    for r1, r2 in zip(h1, h2):
+        if r1.tau != r2.tau or r1.event != r2.event or r1.eta != r2.eta:
+            raise InvariantViolation(
+                seed, "plan-parity",
+                f"round {r1.tau}: control plane diverged "
+                f"({r1.event!r}/{r1.eta} vs {r2.event!r}/{r2.eta})")
+    d1, d2 = device["span_log"], plan["span_log"]
+    if len(d1) != len(d2):
+        raise InvariantViolation(
+            seed, "plan-parity",
+            f"span-arg recompute count {len(d2)} != {len(d1)}")
+    for (t1, p1, a1, l1), (t2, p2, a2, l2) in zip(d1, d2):
+        if t1 != t2 or l1 != l2 or not np.array_equal(p1, p2) \
+                or not np.array_equal(a1, a2):
+            raise InvariantViolation(
+                seed, "plan-parity",
+                f"span args at tau {t1}/{t2} diverged")
+    s1, s2 = device["state"], plan["state"]
+    if (s1.objective != s2.objective or s1.departed != s2.departed
+            or s1.slot_of != s2.slot_of):
+        raise InvariantViolation(seed, "plan-parity",
+                                 "final membership diverged")
+
+
+# -- corpus entry points -------------------------------------------------------
+
+def run_fuzz_case(harness: FuzzHarness, seed: int, *,
+                  check_plan_parity: bool = True,
+                  case: Optional[FuzzCase] = None) -> dict:
+    """Generate (or replay) one case and assert every invariant.  Returns
+    case statistics for corpus reporting."""
+    if case is None:
+        case = generate_case(seed, n_founding=harness.n_founding,
+                             capacity=harness.capacity,
+                             n_arrival_pool=harness.n_arrival_pool)
+    ref = _execute(harness, case, mode="device", honor_kills=False)
+    _check_zero_recompile(seed, harness)
+    _check_weight_sanity(seed, harness, ref)
+    killed = _execute(harness, case, mode="device", honor_kills=True)
+    _check_zero_recompile(seed, harness)
+    _check_exact_resume(seed, ref, killed)
+    stats = {"seed": seed, "ops": len(case.ops),
+             "rounds": case.total_rounds, "kills": case.n_kills,
+             "resumes": killed["n_resumes"],
+             "events_applied": ref["state"].events_applied,
+             "plan_parity": False}
+    if check_plan_parity:
+        plan = _execute(harness, case, mode="plan", honor_kills=True)
+        _check_zero_recompile(seed, harness)
+        _check_weight_sanity(seed, harness, plan)
+        # compare against the *killed* device run: both resume at the
+        # same boundaries, so their span-arg recompute logs line up
+        _check_plan_parity(seed, killed, plan)
+        stats["plan_parity"] = True
+    return stats
+
+
+def run_corpus(seeds, *, harness: Optional[FuzzHarness] = None,
+               check_plan_parity: bool = True) -> dict:
+    """Run a seed corpus; returns aggregate statistics (and the per-case
+    rows) — shared by the tier-1 test and benchmarks/fuzz_bench.py."""
+    if harness is None:
+        harness = FuzzHarness()
+    rows = [run_fuzz_case(harness, int(s),
+                          check_plan_parity=check_plan_parity)
+            for s in seeds]
+    return {"cases": len(rows),
+            "rounds": int(sum(r["rounds"] for r in rows)),
+            "kills": int(sum(r["kills"] for r in rows)),
+            "resumes": int(sum(r["resumes"] for r in rows)),
+            "events_applied": int(sum(r["events_applied"]
+                                      for r in rows)),
+            "seeds": [r["seed"] for r in rows],
+            "per_case": rows}

@@ -1,4 +1,5 @@
-"""FederationService: concurrent event ingestion over a live scheduler.
+"""FederationService: concurrent event ingestion over a live scheduler,
+with optional crash supervision.
 
 Closes the ROADMAP's "serve.py gap": the StreamScheduler consumes events
 pushed between blocking ``run()`` calls, but nothing *produced* them while
@@ -18,6 +19,38 @@ training ran.  This layer makes the control plane live:
     ``StreamScheduler.save``) without tearing the service down — the
     mid-stream checkpoint/resume path for deployments.
 
+Supervision (``supervise=True``, requires ``snapshot_dir``) hardens the
+worker against arbitrary failure.  A supervisor thread watches for worker
+death (exception) and span hangs (heartbeat older than ``span_timeout``)
+and recovers:
+
+  1. bump the generation, set the old generation's abort event (releases
+     cooperative stalls), join the dead worker;
+  2. restore a fresh scheduler from the newest periodic snapshot, falling
+     back past corrupt ones (checksum failures raise
+     CorruptCheckpointError) to older generations;
+  3. re-push the event journal: every ingested event is tagged with the
+     snapshot epoch current at ingest, so events not yet baked into the
+     restored snapshot are replayed onto the restored queue — ingestion
+     is never lost to a crash;
+  4. swap in the restored scheduler with a NEW span lock (a truly hung
+     worker may hold the old one forever), back off exponentially
+     (``backoff0 * 2**streak``; streak resets on a successful span), and
+     start a new worker — giving up with the original error after
+     ``max_restarts`` consecutive failures.
+
+Because per-round randomness is derived by folding the round index into a
+never-split base key, a recovered run replays the lost rounds *exactly*:
+the post-recovery trajectory is bit-identical to an uninterrupted one
+(asserted by the chaos tests).
+
+The scheduler's own event queue can additionally be bounded:
+``queue_policy="merge-stale"`` drops, at ingest, any TraceShift whose tau
+has already passed and that restates the target's *current* trace
+(last-write-wins makes that a no-op), and compacts stale duplicates
+whenever the queue tops ``max_queue`` — the absorbing policy for edges
+that re-announce known availability laws on every retry.
+
 All jax work stays on the worker thread; producers only touch the inbox.
 Scheduler state is guarded by one lock the worker releases between spans,
 so control calls (snapshot/pause/stats) interleave at span granularity.
@@ -33,26 +66,59 @@ Usage::
 """
 from __future__ import annotations
 
+import os
 import queue
+import shutil
 import threading
 import time
-from typing import Optional
+from typing import Callable, List, Optional, Tuple
 
-from repro.fed.events import ParticipationEvent
+from repro.checkpoint import CorruptCheckpointError
+from repro.fed.events import ParticipationEvent, TraceShift
 from repro.fed.stream import StreamScheduler
+
+_QUEUE_POLICIES = ("none", "merge-stale")
+
+
+def _is_stale_noop(state, e) -> bool:
+    """A TraceShift whose tau already passed and that restates the
+    client's current trace: applying it is the identity (last-write-wins
+    semantics), so merge-stale drops it at ingest."""
+    return (isinstance(e, TraceShift) and e.tau <= state.next_tau
+            and 0 <= e.client_id < len(state.clients)
+            and e.trace == state.clients[e.client_id].trace)
 
 
 class FederationService:
     """Thread-safe ingestion + span-execution service over one
-    StreamScheduler."""
+    StreamScheduler, optionally supervised for auto-recovery."""
 
     def __init__(self, scheduler: StreamScheduler, *,
                  span_rounds: int = 4, eval_every: int = 1 << 30,
                  max_rounds: Optional[int] = None,
                  max_pending: int = 1024,
-                 idle_sleep: float = 0.002):
+                 idle_sleep: float = 0.002,
+                 supervise: bool = False,
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every: int = 4,
+                 keep_snapshots: int = 3,
+                 max_restarts: int = 5,
+                 backoff0: float = 0.05,
+                 span_timeout: Optional[float] = None,
+                 join_timeout: float = 5.0,
+                 queue_policy: str = "none",
+                 max_queue: int = 1024,
+                 injector=None,
+                 engine_factory: Optional[Callable] = None,
+                 restore_kwargs: Optional[dict] = None):
         if span_rounds < 1:
             raise ValueError(f"span_rounds must be >= 1, got {span_rounds}")
+        if queue_policy not in _QUEUE_POLICIES:
+            raise ValueError(f"queue_policy must be one of "
+                             f"{_QUEUE_POLICIES}, got {queue_policy!r}")
+        if supervise and snapshot_dir is None:
+            raise ValueError("supervise=True requires snapshot_dir "
+                             "(recovery restores from periodic snapshots)")
         self.scheduler = scheduler
         self.span_rounds = span_rounds
         self.eval_every = eval_every
@@ -60,36 +126,117 @@ class FederationService:
         self._inbox: "queue.Queue[ParticipationEvent]" = queue.Queue(
             maxsize=max_pending)
         self._idle_sleep = idle_sleep
+        # supervision config
+        self._supervised = supervise
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = max(1, snapshot_every)
+        self.keep_snapshots = max(1, keep_snapshots)
+        self.max_restarts = max_restarts
+        self.backoff0 = backoff0
+        self.span_timeout = span_timeout
+        self.join_timeout = join_timeout
+        self.queue_policy = queue_policy
+        self.max_queue = max_queue
+        self._injector = (injector if injector is not None
+                          else getattr(scheduler, "injector", None))
+        self._engine_factory = engine_factory
+        self._restore_kwargs = dict(restore_kwargs or {})
+        # locking: _meta hands out the *current* (lock, scheduler,
+        # generation, abort) quadruple — recovery swaps all four at once,
+        # because a hung worker may never release the old span lock
+        self._meta = threading.Lock()
         self._lock = threading.RLock()       # guards scheduler state
-        self._rounds_cv = threading.Condition(self._lock)
-        # producers never take _lock (a span in flight would stall
-        # ingestion); the submission counter gets its own tiny lock
+        self._abort = threading.Event()      # releases this generation
+        self._gen = 0
+        # waiters get their own condition so they never contend with (or
+        # deadlock against a hung holder of) the span lock
+        self._wait_cv = threading.Condition(threading.Lock())
+        # producers never take the span lock (a span in flight would
+        # stall ingestion); the submission counter gets its own tiny lock
         self._submit_lock = threading.Lock()
         self._stop = threading.Event()
         self._paused = threading.Event()
         self._worker: Optional[threading.Thread] = None
+        self._supervisor: Optional[threading.Thread] = None
+        self._worker_died = threading.Event()
+        self._died: Optional[Tuple[int, BaseException]] = None
         self._error: Optional[BaseException] = None
+        self._heartbeat = time.monotonic()
+        # snapshot/journal bookkeeping (guarded by _snap_lock)
+        self._snap_lock = threading.Lock()
+        self._snapshots: List[Tuple[int, str]] = []   # (epoch, path)
+        self._epoch = 0
+        self._journal: Optional[List[Tuple[int, ParticipationEvent]]] = \
+            [] if (supervise and snapshot_dir is not None) else None
+        self._delayed: List[ParticipationEvent] = []
+        self._fail_streak = 0
+        self.recoveries: List[dict] = []
+        self.snapshot_failures = 0
         self.events_submitted = 0
         self.events_ingested = 0
+        self.events_merged = 0
+        self.events_duplicated = 0
+        self.events_delayed = 0
+        self.events_flooded = 0
         self.spans_run = 0
 
     # -- lifecycle ------------------------------------------------------------
     def start(self) -> "FederationService":
-        if self._worker is not None and self._worker.is_alive():
-            return self
-        self._stop.clear()
-        self._worker = threading.Thread(target=self._loop,
-                                        name="federation-service",
-                                        daemon=True)
+        if self._stop.is_set():
+            raise RuntimeError(
+                "FederationService cannot be restarted after stop(); "
+                "build a new service (restore from a snapshot to resume)")
+        with self._meta:
+            if self._worker is not None and self._worker.is_alive():
+                return self
+            gen, lock, abort, sch = (self._gen, self._lock,
+                                     self._abort, self.scheduler)
+        if self._supervised and not self._snapshots:
+            os.makedirs(self.snapshot_dir, exist_ok=True)
+            # generation-0 base snapshot: recovery always has somewhere to
+            # roll back to, even if the first crash precedes the first
+            # periodic snapshot.  A few attempts ride out injected or
+            # transient write failures.
+            for _ in range(3):
+                if self._auto_snapshot(sch):
+                    break
+            else:
+                raise RuntimeError(
+                    "could not write the initial supervision snapshot "
+                    f"to {self.snapshot_dir!r}")
+        self._heartbeat = time.monotonic()
+        self._worker = threading.Thread(
+            target=self._loop, args=(gen, lock, abort, sch),
+            name=f"federation-service-g{gen}", daemon=True)
         self._worker.start()
+        if self._supervised and self._supervisor is None:
+            self._supervisor = threading.Thread(
+                target=self._supervise, name="federation-supervisor",
+                daemon=True)
+            self._supervisor.start()
         return self
 
-    def stop(self, wait: bool = True) -> None:
+    def stop(self, wait: bool = True,
+             timeout: Optional[float] = None) -> None:
+        """Stop the worker (and supervisor).  ``wait=True`` joins the
+        threads — up to ``timeout`` seconds each when given — and raises
+        if the worker died of an unrecovered error, or if it failed to
+        stop in time (a wedged span)."""
         self._stop.set()
-        with self._rounds_cv:                # wake wait_rounds() callers
-            self._rounds_cv.notify_all()
-        if wait and self._worker is not None:
-            self._worker.join()
+        with self._meta:
+            abort, worker = self._abort, self._worker
+        abort.set()                          # release cooperative stalls
+        self._worker_died.set()              # kick the supervisor awake
+        self._notify()                       # wake wait_rounds() callers
+        if wait:
+            if self._supervisor is not None:
+                self._supervisor.join(timeout)
+            if worker is not None:
+                worker.join(timeout)
+                if worker.is_alive():
+                    raise RuntimeError(
+                        f"federation worker failed to stop within "
+                        f"{timeout}s")
         if self._error is not None:
             raise RuntimeError("federation worker died") from self._error
 
@@ -101,8 +248,14 @@ class FederationService:
 
     @property
     def running(self) -> bool:
-        return (self._worker is not None and self._worker.is_alive()
+        with self._meta:
+            worker = self._worker
+        return (worker is not None and worker.is_alive()
                 and not self._stop.is_set())
+
+    @property
+    def generation(self) -> int:
+        return self._gen
 
     # -- ingestion (any thread) ------------------------------------------------
     def submit(self, *events: ParticipationEvent, block: bool = True,
@@ -110,7 +263,11 @@ class FederationService:
         """Enqueue events for ingestion.  A full inbox applies
         backpressure: blocks (optionally up to ``timeout``) when
         ``block=True``, else returns False without enqueueing anything
-        beyond the events already accepted."""
+        beyond the events already accepted.  Raises once the service has
+        been stopped — those events would never be ingested."""
+        if self._stop.is_set():
+            raise RuntimeError("cannot submit to a stopped "
+                               "FederationService")
         for e in events:
             try:
                 self._inbox.put(e, block=block, timeout=timeout)
@@ -128,7 +285,7 @@ class FederationService:
         until its tau is reached).  True if drained within timeout."""
         deadline = None if timeout is None else time.monotonic() + timeout
         while self.events_ingested < self.events_submitted \
-                or not self._inbox.empty():
+                or not self._inbox.empty() or self._delayed:
             if self._error is not None:
                 raise RuntimeError("federation worker died") from self._error
             if deadline is not None and time.monotonic() > deadline:
@@ -140,18 +297,30 @@ class FederationService:
     def pause(self) -> None:
         """Stop span execution (ingestion continues).  Returns once the
         in-flight span has finished, so scheduler state is boundary-
-        consistent afterwards."""
+        consistent afterwards.  Generation-aware: if a recovery swaps the
+        span lock while we wait, the barrier re-targets the new one."""
         self._paused.set()
-        with self._lock:
-            pass                      # barrier: wait out the current span
+        while True:
+            with self._meta:
+                gen, lock = self._gen, self._lock
+            if lock.acquire(timeout=0.2):
+                try:
+                    with self._meta:
+                        same = (gen == self._gen)
+                finally:
+                    lock.release()
+                if same:
+                    return                # barrier done at a boundary
+            if self._stop.is_set():
+                return
 
     def resume(self) -> None:
         self._paused.clear()
 
     def wait_rounds(self, n: int, timeout: Optional[float] = None) -> bool:
         """Block until the scheduler clock reaches round n."""
-        with self._rounds_cv:
-            ok = self._rounds_cv.wait_for(
+        with self._wait_cv:
+            ok = self._wait_cv.wait_for(
                 lambda: self.scheduler._next_tau >= n
                 or self._error is not None or self._stop.is_set(),
                 timeout=timeout)
@@ -167,11 +336,13 @@ class FederationService:
         was_paused = self._paused.is_set()
         self.pause()                  # settle at a span boundary
         try:
-            with self._lock:
-                self._ingest()        # fold already-submitted events in
-                state = self.scheduler.state.to_dict()
+            with self._meta:
+                lock, sch = self._lock, self.scheduler
+            with lock:
+                self._ingest(sch)     # fold already-submitted events in
+                state = sch.state.to_dict()
                 if path is not None:
-                    self.scheduler.save(path)
+                    sch.save(path)
         finally:
             if not was_paused:
                 self.resume()
@@ -185,49 +356,312 @@ class FederationService:
                 "events_ingested": self.events_ingested,
                 "events_applied": sch.events_applied,
                 "events_pending": sch.pending,
+                "events_merged": self.events_merged,
+                "events_duplicated": self.events_duplicated,
+                "events_delayed": self.events_delayed,
+                "events_flooded": self.events_flooded,
                 "inbox_depth": self._inbox.qsize(),
                 "running": self.running,
-                "paused": self._paused.is_set()}
+                "paused": self._paused.is_set(),
+                "supervised": self._supervised,
+                "generation": self._gen,
+                "recoveries": len(self.recoveries),
+                "snapshot_failures": self.snapshot_failures,
+                "snapshots_kept": len(self._snapshots),
+                "journal_len": (len(self._journal)
+                                if self._journal is not None else 0)}
+
+    def chaos_report(self) -> dict:
+        """Supervision outcome summary: one record per recovery (cause,
+        epoch restored, snapshots skipped as corrupt, events replayed,
+        MTTR seconds) plus aggregate counters — the payload behind
+        ``fed_serve --chaos`` and BENCH_stream.json["chaos"]."""
+        mttrs = [r["mttr_s"] for r in self.recoveries]
+        rec_rounds = sum(max(0, r["tau_at_failure"] - r["tau_resumed"])
+                         for r in self.recoveries)
+        report = {
+            "recoveries": list(self.recoveries),
+            "n_recoveries": len(self.recoveries),
+            "mttr_mean_s": (sum(mttrs) / len(mttrs)) if mttrs else 0.0,
+            "mttr_max_s": max(mttrs) if mttrs else 0.0,
+            "recovered_rounds": int(rec_rounds),
+            "snapshot_failures": self.snapshot_failures,
+            "events_merged": self.events_merged,
+            "final_rounds": int(self.scheduler._next_tau),
+        }
+        if self._injector is not None and hasattr(self._injector,
+                                                  "summary"):
+            report["faults"] = self._injector.summary()
+        return report
 
     # -- worker ----------------------------------------------------------------
-    def _ingest(self) -> int:
-        """Move everything in the inbox onto the scheduler queue (caller
-        holds the lock)."""
+    def _notify(self) -> None:
+        with self._wait_cv:
+            self._wait_cv.notify_all()
+
+    def _push_event(self, sch: StreamScheduler, e) -> None:
+        """Hand one event to the scheduler, applying the queue policy."""
+        if self.queue_policy == "merge-stale":
+            if _is_stale_noop(sch.state, e):
+                self.events_merged += 1
+                return
+            sch.push(e)
+            if sch.pending > self.max_queue:
+                self.events_merged += sch.state.compact_stale_traceshifts()
+        else:
+            sch.push(e)
+
+    def _accept(self, sch: StreamScheduler, e, count: bool = True) -> None:
+        if self._journal is not None:
+            with self._snap_lock:
+                self._journal.append((self._epoch, e))
+        self._push_event(sch, e)
+        if count:
+            self.events_ingested += 1
+
+    def _ingest(self, sch: StreamScheduler) -> int:
+        """Move everything in the inbox (plus any fault-delayed holdbacks)
+        onto the scheduler queue (caller holds the span lock)."""
         n = 0
+        held, self._delayed = self._delayed, []
+        for e in held:
+            self._accept(sch, e)
+            n += 1
         while True:
             try:
                 e = self._inbox.get_nowait()
             except queue.Empty:
                 break
-            self.scheduler.push(e)
-            self.events_ingested += 1
+            f = (self._injector.fire("ingest")
+                 if self._injector is not None else None)
+            if f is not None and f.kind == "delay":
+                self._delayed.append(e)      # out-of-order: next cycle
+                self.events_delayed += 1
+                continue
+            self._accept(sch, e)
             n += 1
+            if f is not None and f.kind == "dup":
+                self._accept(sch, e, count=False)   # delivered twice
+                self.events_duplicated += 1
         return n
 
-    def _loop(self) -> None:
+    def _maybe_flood(self, sch: StreamScheduler) -> None:
+        f = self._injector.fire("flood")
+        if f is not None and f.kind == "flood":
+            from repro.fed.faults import make_flood
+            flood = make_flood(sch.state, f.size or 1,
+                               self._injector._rng)
+            for ev in flood:
+                self._push_event(sch, ev)    # policy absorbs the stale
+            self.events_flooded += len(flood)
+
+    def _loop(self, gen: int, lock, abort: threading.Event,
+              sch: StreamScheduler) -> None:
+        """One worker generation.  Everything scheduler-touching uses the
+        captured (lock, sch) pair: after a recovery, a released zombie of
+        an old generation can only ever touch its own (discarded) pair."""
         try:
-            while not self._stop.is_set():
-                with self._lock:
-                    self._ingest()
+            while not self._stop.is_set() and not abort.is_set():
+                if gen == self._gen:
+                    self._heartbeat = time.monotonic()
+                with lock:
+                    if abort.is_set():
+                        break
+                    self._ingest(sch)
                     done = (self.max_rounds is not None
-                            and self.scheduler._next_tau >= self.max_rounds)
+                            and sch._next_tau >= self.max_rounds)
                     if done:
                         # budget reached: wake waiters so wait_rounds(n)
                         # with an unreachable n re-checks its predicate
                         # instead of sleeping past a concurrent stop()
-                        self._rounds_cv.notify_all()
+                        self._notify()
                     elif not self._paused.is_set():
+                        if self._injector is not None:
+                            self._maybe_flood(sch)
+                            self._injector.fire("worker", abort=abort)
+                            if abort.is_set() or self._stop.is_set():
+                                break        # hang released by recovery
                         n = self.span_rounds
                         if self.max_rounds is not None:
-                            n = min(n, self.max_rounds
-                                    - self.scheduler._next_tau)
-                        self.scheduler.run(n, eval_every=self.eval_every)
+                            n = min(n, self.max_rounds - sch._next_tau)
+                        sch.run(n, eval_every=self.eval_every)
                         self.spans_run += 1
-                        self._rounds_cv.notify_all()
+                        self._fail_streak = 0
+                        self._notify()
+                        if (self._supervised
+                                and self.spans_run % self.snapshot_every
+                                == 0):
+                            self._auto_snapshot(sch)
                         continue
                 # paused or round budget reached: idle, keep ingesting
                 time.sleep(self._idle_sleep)
-        except BaseException as e:          # surface on the control thread
-            self._error = e
-            with self._rounds_cv:
-                self._rounds_cv.notify_all()
+        except BaseException as e:
+            if self._supervised:
+                self._died = (gen, e)
+                self._worker_died.set()      # hand off to the supervisor
+            else:
+                self._error = e              # surface on control threads
+            self._notify()
+
+    # -- snapshots / journal ---------------------------------------------------
+    def _auto_snapshot(self, sch: StreamScheduler) -> bool:
+        """Write the periodic snapshot for the current epoch; advance the
+        epoch, enforce retention, and prune the journal entries that are
+        now baked into every retained snapshot.  A write failure leaves
+        the epoch unchanged (the journal keeps covering those events)."""
+        with self._snap_lock:
+            epoch = self._epoch
+        path = os.path.join(self.snapshot_dir, f"snap-{epoch:06d}")
+        try:
+            sch.save(path)
+        except OSError:
+            self.snapshot_failures += 1
+            shutil.rmtree(path, ignore_errors=True)
+            return False
+        with self._snap_lock:
+            self._snapshots.append((epoch, path))
+            self._epoch = epoch + 1
+            doomed = []
+            while len(self._snapshots) > self.keep_snapshots:
+                doomed.append(self._snapshots.pop(0)[1])
+            oldest = self._snapshots[0][0]
+            if self._journal is not None:
+                # entries tagged <= oldest retained epoch are inside every
+                # snapshot we could still restore from
+                self._journal = [it for it in self._journal
+                                 if it[0] > oldest]
+        for p in doomed:
+            shutil.rmtree(p, ignore_errors=True)
+        return True
+
+    # -- supervision -----------------------------------------------------------
+    def _supervise(self) -> None:
+        poll = (min(0.25, self.span_timeout / 4)
+                if self.span_timeout is not None else 0.25)
+        while not self._stop.is_set():
+            self._worker_died.wait(timeout=poll)
+            if self._stop.is_set():
+                break
+            if self._worker_died.is_set():
+                self._worker_died.clear()
+                died = self._died
+                self._died = None
+                if died is not None:
+                    self._recover(died[0], died[1])
+                continue
+            if self.span_timeout is None:
+                continue
+            with self._meta:
+                gen, worker = self._gen, self._worker
+            stale = time.monotonic() - self._heartbeat
+            if (worker is not None and worker.is_alive()
+                    and stale > self.span_timeout):
+                self._recover(gen, TimeoutError(
+                    f"span watchdog: no worker heartbeat for "
+                    f"{stale:.2f}s (limit {self.span_timeout}s)"))
+
+    def _give_up(self, err: BaseException) -> None:
+        self._error = err
+        self._stop.set()
+        with self._meta:
+            self._abort.set()
+        self._notify()
+
+    def _recover(self, gen: int, err: BaseException) -> None:
+        """Supervisor-side recovery: abort+join generation ``gen``,
+        restore the newest good snapshot, replay the journal tail, swap
+        in a fresh (scheduler, lock) pair and start generation gen+1."""
+        t0 = time.monotonic()
+        with self._meta:
+            if gen != self._gen or self._stop.is_set():
+                return                       # stale report, already done
+            self._gen = gen + 1
+            old_abort, old_worker = self._abort, self._worker
+            old_sch = self.scheduler
+        old_abort.set()
+        self._notify()
+        if old_worker is not None:
+            old_worker.join(timeout=self.join_timeout)
+        joined = old_worker is None or not old_worker.is_alive()
+        tau_at_failure = int(old_sch._next_tau)
+
+        if self._fail_streak >= self.max_restarts:
+            self._give_up(err)
+            return
+        streak = self._fail_streak
+        self._fail_streak = streak + 1
+
+        # restore: newest snapshot first, fall back past corrupt ones
+        with self._snap_lock:
+            candidates = list(self._snapshots)
+        restored = None
+        restored_epoch = None
+        corrupt_skipped = []
+        engine_reused = False
+        for epoch, path in reversed(candidates):
+            # reusing the warm engine is only safe once the old worker is
+            # provably no longer driving it
+            eng = (self._engine_factory()
+                   if (joined and self._engine_factory is not None)
+                   else None)
+            try:
+                restored = StreamScheduler.restore(
+                    path, engine=eng, injector=self._injector,
+                    **self._restore_kwargs)
+                restored_epoch = epoch
+                engine_reused = eng is not None
+                break
+            except CorruptCheckpointError as ce:
+                corrupt_skipped.append({"path": path, "error": str(ce)})
+                continue
+            except Exception as re:
+                self._give_up(re)
+                return
+        if restored is None:
+            self._give_up(err if not corrupt_skipped else
+                          CorruptCheckpointError(
+                              "no restorable snapshot: all "
+                              f"{len(candidates)} candidates corrupt"))
+            return
+
+        # replay the journal tail: events ingested after the restored
+        # snapshot was written are not inside it — push them again (the
+        # restored queue orders them by tau/seq exactly as before)
+        with self._snap_lock:
+            replay = ([e for tag, e in self._journal
+                       if tag > restored_epoch]
+                      if self._journal is not None else [])
+        for e in replay:
+            self._push_event(restored, e)
+
+        new_lock = threading.RLock()
+        new_abort = threading.Event()
+        with self._meta:
+            self.scheduler = restored
+            self._lock = new_lock
+            self._abort = new_abort
+        self.recoveries.append({
+            "generation": gen + 1,
+            "cause": repr(err),
+            "tau_at_failure": tau_at_failure,
+            "tau_resumed": int(restored._next_tau),
+            "restored_epoch": restored_epoch,
+            "corrupt_skipped": corrupt_skipped,
+            "events_replayed": len(replay),
+            "worker_joined": joined,
+            "engine_reused": engine_reused,
+            "backoff_s": self.backoff0 * (2 ** streak),
+            "mttr_s": time.monotonic() - t0,
+        })
+        # exponential backoff before the restart (abortable by stop)
+        if self._stop.wait(self.backoff0 * (2 ** streak)):
+            return
+        self._heartbeat = time.monotonic()
+        worker = threading.Thread(
+            target=self._loop,
+            args=(gen + 1, new_lock, new_abort, restored),
+            name=f"federation-service-g{gen + 1}", daemon=True)
+        with self._meta:
+            self._worker = worker
+        worker.start()
+        self._notify()

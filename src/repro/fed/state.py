@@ -116,6 +116,36 @@ class FedState:
     def pop_event(self) -> ParticipationEvent:
         return heapq.heappop(self.queue)[2]
 
+    def compact_stale_traceshifts(self) -> int:
+        """Bound event-heap growth under TraceShift floods (the ROADMAP
+        soak question): among queued *stale* TraceShifts — tau already
+        passed, so they all fire at the same next boundary — keep only
+        the newest per client (last-write-wins, exactly what applying
+        them in order would compute) and elide that one too when it
+        restates the client's current trace (idempotent no-op).  Future-
+        tau events and every other event kind are untouched.  Returns the
+        number of events dropped."""
+        now = self.next_tau
+        keep, newest = [], {}
+        for entry in self.queue:
+            e = entry[2]
+            if isinstance(e, TraceShift) and entry[0] <= now:
+                cur = newest.get(e.client_id)
+                if cur is None or entry[1] > cur[1]:
+                    newest[e.client_id] = entry
+            else:
+                keep.append(entry)
+        for entry in newest.values():
+            e = entry[2]
+            if not (0 <= e.client_id < len(self.clients)
+                    and e.trace == self.clients[e.client_id].trace):
+                keep.append(entry)
+        dropped = len(self.queue) - len(keep)
+        if dropped:
+            heapq.heapify(keep)
+            self.queue = keep
+        return dropped
+
     # -- membership ----------------------------------------------------------
     def active(self, i: int, tau: int) -> bool:
         return (i in self.objective and i not in self.departed

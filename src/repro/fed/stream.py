@@ -106,10 +106,18 @@ class StreamScheduler:
                  reboots: Optional[List[RebootState]] = None,
                  objective: Optional[set] = None,
                  state: Optional[FedState] = None,
-                 events: Sequence[ParticipationEvent] = ()):
+                 events: Sequence[ParticipationEvent] = (),
+                 injector=None, log_spans: bool = False):
         if mode not in ("device", "plan"):
             raise ValueError(f"mode must be device|plan, got {mode!r}")
         self.mode = mode
+        # fault-injection hook (fed/faults.py): fires site "sched_span"
+        # at every span iteration so chaos tests can crash mid-run
+        self.injector = injector
+        # optional per-span argument log: (tau, p, active, lr_shift_tau)
+        # appended whenever membership-derived span args are recomputed —
+        # the fuzzer's weight/LR invariants forward-fill from it
+        self.span_log: Optional[List[tuple]] = [] if log_spans else None
         clients = list(clients) if state is None else state.clients
         if engine is None:
             engine = RoundEngine(
@@ -283,11 +291,17 @@ class StreamScheduler:
         stop = start + n_rounds
         tau = start
         while tau < stop:
+            if self.injector is not None:
+                self.injector.fire("sched_span", tau=tau)
             ev = self._apply_events(tau)
             end = st.span_end(tau, stop, ev, eval_every)
             R = end - tau
             if self._span_args is None or self._dirty:
                 a = st.span_args(tau)
+                if self.span_log is not None:
+                    self.span_log.append((tau, a["p"].copy(),
+                                          a["active"].copy(),
+                                          a["lr_shift_tau"]))
                 self._span_args = dict(
                     p=jnp.asarray(a["p"]),
                     active=jnp.asarray(a["active"]),
@@ -341,37 +355,59 @@ class StreamScheduler:
         save_fed_checkpoint(
             path, self.params, self.state.to_dict(),
             history=history_to_dict(self.history),
-            config=self.engine_config(), extra=extra)
+            config=self.engine_config(), extra=extra,
+            injector=self.injector)
 
     @classmethod
     def restore(cls, path: str, *, loss_fn: Optional[Callable] = None,
                 task=None, eval_fn: Optional[Callable] = None,
                 evaluate: Optional[Callable] = None, sharding=None,
                 interpret=None, donate: Optional[bool] = None,
+                engine: Optional[RoundEngine] = None, injector=None,
+                log_spans: bool = False,
                 **overrides) -> "StreamScheduler":
         """Rebuild a scheduler from ``save()`` output: the engine is
         reconstructed from the persisted geometry, every occupied slot is
         re-admitted from the serialized client data, and the FedState
         (queue, membership, RNG/key) resumes exactly where it stopped.
         Only the non-serializable callables (loss_fn/task, eval hooks)
-        must be re-supplied."""
+        must be re-supplied.
+
+        ``engine``: reuse an existing engine of the same geometry instead
+        of building (and recompiling) a fresh one — every slot is evicted
+        and the checkpoint's occupancy re-staged.  Safe only when no
+        other thread still drives that engine (the service supervisor
+        reuses its warm engine only after joining the dead worker).
+
+        Raises checkpoint.CorruptCheckpointError when the checkpoint
+        fails its checksum — supervised services fall back to an older
+        snapshot."""
         from repro.checkpoint.io import load_fed_checkpoint
         params, state_dict, history, config, _extra = \
             load_fed_checkpoint(path)
         state = FedState.from_dict(state_dict)
         cfg = dict(config)
         cfg.update(overrides)
-        if task is None and loss_fn is not None and state.clients:
-            from repro.fed.task import ArrayTask
-            task = ArrayTask(loss_fn,
-                             np.asarray(state.clients[0].x).shape[1:])
-        engine = RoundEngine(
-            task=task, clients=[], local_epochs=cfg["local_epochs"],
-            batch_size=cfg["batch_size"], scheme=cfg["scheme"],
-            eta0=cfg["eta0"], chunk_size=cfg["chunk_size"], agg=cfg["agg"],
-            with_metrics=cfg["with_metrics"], capacity=cfg["capacity"],
-            max_samples=cfg["max_samples"], sharding=sharding,
-            interpret=interpret, donate=donate, mode=cfg["engine_mode"])
+        if engine is None:
+            if task is None and loss_fn is not None and state.clients:
+                from repro.fed.task import ArrayTask
+                task = ArrayTask(loss_fn,
+                                 np.asarray(state.clients[0].x).shape[1:])
+            engine = RoundEngine(
+                task=task, clients=[], local_epochs=cfg["local_epochs"],
+                batch_size=cfg["batch_size"], scheme=cfg["scheme"],
+                eta0=cfg["eta0"], chunk_size=cfg["chunk_size"],
+                agg=cfg["agg"], with_metrics=cfg["with_metrics"],
+                capacity=cfg["capacity"], max_samples=cfg["max_samples"],
+                sharding=sharding, interpret=interpret, donate=donate,
+                mode=cfg["engine_mode"])
+        else:
+            if engine.capacity != cfg["capacity"]:
+                raise ValueError(
+                    f"reused engine capacity {engine.capacity} != "
+                    f"checkpoint capacity {cfg['capacity']}")
+            for slot in range(engine.capacity):
+                engine.evict(slot)
         # re-stage every occupied slot (one fused burst; trace CDFs ride
         # along with each admit)
         engine.admit_many(sorted(
@@ -381,7 +417,8 @@ class StreamScheduler:
         sch = cls(init_params=jax.tree.map(jnp.asarray, params),
                   engine=engine, state=state, mode=cfg["mode"],
                   eval_fn=eval_fn, evaluate=evaluate,
-                  history=history_from_dict(history))
+                  history=history_from_dict(history),
+                  injector=injector, log_spans=log_spans)
         return sch
 
 

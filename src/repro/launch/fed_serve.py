@@ -15,6 +15,16 @@ to production traffic this container can stage.
       --rounds 20 --snapshot /tmp/ckpt           # checkpoint at the end
   PYTHONPATH=src python -m repro.launch.fed_serve --resume /tmp/ckpt \
       --rounds 20                                # ...and pick it back up
+  PYTHONPATH=src python -m repro.launch.fed_serve --scenario churn \
+      --rounds 40 --chaos 7                      # supervised chaos soak
+
+``--chaos SEED`` turns the run into a fault-injection soak: a seeded
+FaultPlan (worker crashes/hangs, mid-span scheduler crashes, checkpoint
+write failures and corruption, event floods, duplicated/delayed
+ingestion) is wired into every boundary, and the service runs supervised
+— periodic snapshots, a span watchdog, and crash-triggered restore +
+replay.  The summary gains a ``"chaos"`` block (per-recovery records,
+MTTR, fault log) from ``FederationService.chaos_report()``.
 
 Trace format (JSONL): one event per line, the fed/events.py dict schema
 with ndarray fields inlined as ``{"__ndarray__": {"data": [...],
@@ -117,6 +127,20 @@ def main(argv=None) -> dict:
                          "the checkpoint's own mode unless given "
                          "explicitly — overriding it breaks exact resume)")
     ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="run supervised with a seeded FaultPlan injected "
+                         "at every boundary; adds a 'chaos' block to the "
+                         "summary")
+    ap.add_argument("--chaos-dir", default=None, metavar="DIR",
+                    help="supervision snapshot directory for --chaos "
+                         "(default: a fresh temp dir)")
+    ap.add_argument("--snapshot-every", type=int, default=2,
+                    help="spans between supervision auto-snapshots")
+    ap.add_argument("--span-timeout", type=float, default=15.0,
+                    help="watchdog: seconds of worker silence before the "
+                         "supervisor declares a hang (--chaos only)")
+    ap.add_argument("--max-restarts", type=int, default=8,
+                    help="consecutive failed recoveries before giving up")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None,
                     help="also write the summary to this path")
@@ -156,9 +180,30 @@ def main(argv=None) -> dict:
                  enumerate(sorted(sc.events, key=lambda e: e.tau))]
     start_tau = sch._next_tau             # 0 fresh; checkpoint tau resumed
 
+    svc_kwargs: dict = {}
+    if args.chaos is not None:
+        import tempfile
+
+        from repro.fed.faults import FaultPlan
+        n_spans = max(1, rounds // max(1, args.span_rounds))
+        sch.injector = FaultPlan.generate(
+            args.chaos, spans=n_spans,
+            saves=max(1, n_spans // args.snapshot_every))
+        snap_dir = args.chaos_dir or tempfile.mkdtemp(prefix="fed-chaos-")
+        engine = sch.engine               # survives scheduler rebuilds
+        svc_kwargs = dict(
+            supervise=True, snapshot_dir=snap_dir,
+            snapshot_every=args.snapshot_every,
+            span_timeout=args.span_timeout,
+            max_restarts=args.max_restarts,
+            queue_policy="merge-stale",
+            engine_factory=lambda: engine,
+            restore_kwargs=dict(loss_fn=_make_loss(),
+                                eval_fn=_paper_eval_fn()))
+
     svc = FederationService(sch, span_rounds=args.span_rounds,
                             eval_every=eval_every, max_rounds=rounds,
-                            max_pending=args.max_pending)
+                            max_pending=args.max_pending, **svc_kwargs)
     t0 = time.perf_counter()
     with svc:
         for at, e in timed:               # the main thread is the client
@@ -172,6 +217,7 @@ def main(argv=None) -> dict:
             svc.snapshot(args.snapshot)
     wall = time.perf_counter() - t0
 
+    sch = svc.scheduler                   # recovery may have rebuilt it
     served = sch._next_tau - start_tau    # this invocation's rounds only
     summary = summarize_history(sch.history)
     summary.update(scenario=sc.name, wall_s=round(wall, 3),
@@ -179,10 +225,18 @@ def main(argv=None) -> dict:
                    rounds_per_sec=round(served / wall, 2),
                    **{k: v for k, v in svc.stats().items()
                       if k not in ("running", "paused")})
+    if args.chaos is not None:
+        summary["chaos"] = svc.chaos_report()
     if not args.quiet:
         print(f"# served {served} rounds in {wall:.2f}s "
               f"({summary['rounds_per_sec']} rounds/s), "
               f"{svc.events_ingested} events ingested live")
+        if args.chaos is not None:
+            ch = summary["chaos"]
+            print(f"# chaos: {ch['n_recoveries']} recoveries, "
+                  f"mttr_mean={ch['mttr_mean_s']:.3f}s, "
+                  f"{ch['recovered_rounds']} rounds recomputed, "
+                  f"{len(ch.get('faults', []))} faults fired")
         for k in ("evals", "final_loss", "final_acc", "mean_active",
                   "events_submitted", "events_applied", "spans_run"):
             print(f"{k},{summary[k]}")

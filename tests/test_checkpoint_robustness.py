@@ -1,0 +1,115 @@
+"""Checkpoint durability: atomic writes (a failed or killed save never
+damages the previous checkpoint), checksum-gated loads (corruption is
+detected, not resumed), and bit-exact round-trips for non-native dtypes
+(bf16 leaves survive the npz container via a uint16 view + manifest
+dtype record)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CorruptCheckpointError
+from repro.checkpoint.io import (load_checkpoint, load_fed_checkpoint,
+                                 save_checkpoint, save_fed_checkpoint)
+from repro.fed import Fault, FaultPlan, InjectedWriteError
+from repro.fed.faults import corrupt_file
+
+
+def small_params(scale=1.0):
+    return {"w": np.arange(12, dtype=np.float32).reshape(3, 4) * scale,
+            "b": np.ones(4, np.float32) * scale}
+
+
+def small_state(tau=3):
+    return {"next_tau": tau, "seq": 0, "events_applied": 0,
+            "rb_tau0": np.zeros(4, np.int32)}
+
+
+def test_failed_save_leaves_previous_checkpoint_intact(tmp_path):
+    """The io-error fires after the tmp file is written but before the
+    rename — the prior npz/manifest pair must remain the committed one."""
+    path = str(tmp_path / "ckpt")
+    save_fed_checkpoint(path, small_params(1.0), small_state(tau=3))
+    plan = FaultPlan([Fault("ckpt_save", 0, "io-error")], seed=0)
+    with pytest.raises(InjectedWriteError):
+        save_fed_checkpoint(path, small_params(2.0), small_state(tau=9),
+                            injector=plan)
+    params, state, _, _, _ = load_fed_checkpoint(path)
+    np.testing.assert_array_equal(params["w"], small_params(1.0)["w"])
+    assert state["next_tau"] == 3            # the old run, not the torn one
+    assert not [f for f in os.listdir(path) if f.endswith(".tmp")]
+
+
+def test_corrupted_npz_fails_checksum(tmp_path):
+    path = str(tmp_path / "ckpt")
+    save_fed_checkpoint(path, small_params(), small_state())
+    corrupt_file(os.path.join(path, "fed_checkpoint.npz"),
+                 np.random.default_rng(0))
+    with pytest.raises(CorruptCheckpointError, match="checksum"):
+        load_fed_checkpoint(path)
+    # verify=False trades the gate for speed — on an intact file only;
+    # here the zip container itself may also be broken, so just assert
+    # the verified path is the one that guarantees detection
+    with pytest.raises(Exception):
+        load_fed_checkpoint(path)
+
+
+def test_truncated_npz_is_corrupt_not_crash(tmp_path):
+    path = str(tmp_path / "ckpt")
+    save_fed_checkpoint(path, small_params(), small_state())
+    npz = os.path.join(path, "fed_checkpoint.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+    with pytest.raises(CorruptCheckpointError):
+        load_fed_checkpoint(path)
+
+
+def test_mangled_manifest_is_corrupt_not_crash(tmp_path):
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, small_params(), step=5)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        f.write('{"step": 5, "keys": {')      # torn mid-write
+    with pytest.raises(CorruptCheckpointError, match="manifest"):
+        load_checkpoint(path)
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float16", "float32"])
+def test_plain_checkpoint_dtype_roundtrip(tmp_path, dtype):
+    """npz cannot hold bf16 natively; the writer views it as uint16 and
+    records the true dtype in the manifest — the round-trip must be
+    bit-exact, not a float32 détour."""
+    path = str(tmp_path / "ckpt")
+    w = jnp.asarray(np.linspace(-3, 3, 24).reshape(4, 6), dtype=dtype)
+    save_checkpoint(path, {"w": w, "n": np.arange(3)}, step=1)
+    loaded, manifest = load_checkpoint(path)
+    assert str(loaded["w"].dtype) == dtype
+    np.testing.assert_array_equal(
+        np.asarray(loaded["w"]).view(np.uint16 if dtype != "float32"
+                                     else np.uint32),
+        np.asarray(jax.device_get(w)).view(np.uint16 if dtype != "float32"
+                                           else np.uint32))
+    np.testing.assert_array_equal(loaded["n"], np.arange(3))
+
+
+def test_fed_checkpoint_bf16_roundtrip(tmp_path):
+    path = str(tmp_path / "ckpt")
+    params = {"w": jnp.asarray([[1.5, -2.25], [0.125, 3e-3]],
+                               dtype=jnp.bfloat16),
+              "b": np.zeros(2, np.float32)}
+    state = small_state()
+    # state dicts carry numpy (FedState.to_dict contract) — an ml_dtypes
+    # bf16 ndarray, not a jax Array
+    state["blob"] = np.asarray(jax.device_get(
+        jnp.asarray([0.1, 0.7], dtype=jnp.bfloat16)))
+    save_fed_checkpoint(path, params, state)
+    loaded, lstate, _, _, _ = load_fed_checkpoint(path)
+    assert str(loaded["w"].dtype) == "bfloat16"
+    np.testing.assert_array_equal(
+        np.asarray(loaded["w"]).view(np.uint16),
+        np.asarray(jax.device_get(params["w"])).view(np.uint16))
+    assert str(lstate["blob"].dtype) == "bfloat16"
+    np.testing.assert_array_equal(
+        np.asarray(lstate["blob"]).view(np.uint16),
+        state["blob"].view(np.uint16))

@@ -1,0 +1,85 @@
+"""Event-stream fuzzer (fed/fuzz.py): a seeded corpus of adversarial
+interleavings — arrivals, departures, rejoins, trace shifts, bursts,
+duplicate deliveries, kill/restore — each checked against the control
+plane's invariants (exact resume, zero recompile, scheme-weight sanity,
+plan-vs-device parity).  Plus the meta-test: deliberately break an
+invariant source and assert the fuzzer actually catches it."""
+import numpy as np
+import pytest
+
+from repro.fed import (FedState, FuzzHarness, InvariantViolation,
+                       generate_case, run_corpus, run_fuzz_case)
+
+# The tier-1 corpus: recorded so a violating seed reproduces exactly
+# (`run_fuzz_case(FuzzHarness(), seed)` replays one).  Nightly scale
+# lives in benchmarks/fuzz_bench.py.
+CORPUS_SEEDS = range(30)
+
+
+@pytest.fixture(scope="module")
+def harness():
+    """One warm engine for the whole module — a fresh RoundEngine costs
+    ~4s of compiles; the fuzzer's zero-recompile invariant needs the
+    pooled engine anyway."""
+    return FuzzHarness()
+
+
+def test_corpus_passes_all_invariants(harness):
+    agg = run_corpus(CORPUS_SEEDS, harness=harness)
+    assert agg["cases"] == len(CORPUS_SEEDS)
+    # the corpus must actually exercise the machinery, not no-op through
+    assert agg["rounds"] > 100
+    assert agg["kills"] > 0                 # some cases kill + restore
+    assert agg["resumes"] == agg["kills"]   # every kill resumed
+    assert agg["events_applied"] > 30
+    assert all(r["plan_parity"] for r in agg["per_case"])
+
+
+def test_generator_is_reproducible():
+    for seed in (0, 7, 123):
+        a = generate_case(seed)
+        b = generate_case(seed)
+        assert a.seed == b.seed == seed
+        assert a.ops == b.ops
+        assert a.total_rounds == b.total_rounds
+        assert a.n_kills == b.n_kills
+    # and different seeds explore different interleavings
+    assert generate_case(0).ops != generate_case(1).ops
+
+
+def test_case_replay_matches_fresh_generation(harness):
+    case = generate_case(3)
+    fresh = run_fuzz_case(harness, 3)
+    replay = run_fuzz_case(harness, 3, case=case)
+    assert fresh == replay
+
+
+# -- mutation smoke: a fuzzer that can't fail is not a fuzzer ------------------
+
+def test_mutation_broken_weights_is_caught(harness, monkeypatch):
+    """Inflate the data weights the state hands the engine: the
+    weight-sanity invariant (sum p <= 1) must fire."""
+    orig = FedState.data_weights
+
+    def inflated(self, *a, **kw):
+        return np.asarray(orig(self, *a, **kw)) * 1.5
+    monkeypatch.setattr(FedState, "data_weights", inflated)
+    with pytest.raises(InvariantViolation) as ei:
+        run_fuzz_case(harness, 0, check_plan_parity=False)
+    assert "weight" in str(ei.value)
+
+
+def test_mutation_broken_resume_is_caught(harness, monkeypatch):
+    """Perturb the LR-decay anchor during kill/restore rehydration: the
+    exact-resume invariant (bit-identical history across kills) must
+    fire on any seed whose case kills at least once."""
+    seed = next(s for s in range(64) if generate_case(s).n_kills > 0)
+    orig = FedState.from_dict.__func__
+
+    def skewed(cls, d, *a, **kw):
+        st = orig(cls, d, *a, **kw)
+        st.lr_shift_tau += 1
+        return st
+    monkeypatch.setattr(FedState, "from_dict", classmethod(skewed))
+    with pytest.raises(InvariantViolation):
+        run_fuzz_case(harness, seed, check_plan_parity=False)

@@ -136,3 +136,75 @@ def test_stats_shape():
     assert st["spans_run"] >= 1
     assert st["inbox_depth"] == 0
     assert st["running"] is False
+
+
+# -- lifecycle error paths -----------------------------------------------------
+
+def test_submit_after_stop_raises():
+    sch = make_scheduler()
+    svc = FederationService(sch, span_rounds=2, max_rounds=2)
+    with svc:
+        svc.wait_rounds(2, timeout=120)
+    with pytest.raises(RuntimeError, match="stopped"):
+        svc.submit(TraceShift(0, client_id=0, trace=TRACES[1]))
+
+
+def test_double_start_is_idempotent_restart_is_not():
+    sch = make_scheduler()
+    svc = FederationService(sch, span_rounds=2, max_rounds=None)
+    svc.start()
+    assert svc.start() is svc                # already running: no-op
+    assert svc.wait_rounds(2, timeout=120)
+    svc.stop()
+    with pytest.raises(RuntimeError, match="restarted"):
+        svc.start()                          # dead services stay dead
+
+
+def test_snapshot_while_paused_stays_paused():
+    sch = make_scheduler()
+    svc = FederationService(sch, span_rounds=2, max_rounds=None)
+    with svc:
+        assert svc.wait_rounds(2, timeout=120)
+        svc.pause()
+        frozen = sch._next_tau
+        state = svc.snapshot()               # consistent even while paused
+        assert state["next_tau"] == frozen
+        time.sleep(0.05)
+        assert svc.stats()["paused"]         # snapshot didn't resume us
+        assert sch._next_tau == frozen
+        svc.resume()
+        assert svc.wait_rounds(frozen + 2, timeout=120)
+
+
+def test_drain_racing_a_dead_worker_raises():
+    """drain() must not hang forever when the worker died with the inbox
+    non-empty — it re-raises the worker's error instead of spinning."""
+    from repro.fed import Fault, FaultPlan
+    plan = FaultPlan([Fault("worker", k, "crash") for k in range(4)],
+                     seed=0)
+    sch = make_scheduler()
+    sch.injector = plan
+    svc = FederationService(sch, span_rounds=2, max_rounds=20)
+    svc.start()
+    time.sleep(0.2)                          # let the crash land
+    svc.submit(TraceShift(0, client_id=0, trace=TRACES[1]))
+    with pytest.raises(RuntimeError, match="worker died"):
+        svc.drain(timeout=30)                # nobody is draining
+    with pytest.raises(RuntimeError, match="worker died"):
+        svc.stop()
+
+
+def test_stop_with_timeout_joins_cleanly():
+    sch = make_scheduler()
+    svc = FederationService(sch, span_rounds=2, max_rounds=None)
+    svc.start()
+    assert svc.wait_rounds(2, timeout=120)
+    svc.stop(wait=True, timeout=30)          # bounded join, no error
+    assert not svc.running
+
+
+def test_supervise_requires_snapshot_dir():
+    with pytest.raises(ValueError, match="snapshot_dir"):
+        FederationService(make_scheduler(), supervise=True)
+    with pytest.raises(ValueError, match="queue_policy"):
+        FederationService(make_scheduler(), queue_policy="bogus")
