@@ -38,6 +38,8 @@ def main() -> None:
                     help="skip the concurrent-ingestion service benchmark")
     ap.add_argument("--skip-fuzz", action="store_true",
                     help="skip the invariant-fuzzer + chaos-soak benchmark")
+    ap.add_argument("--skip-telemetry", action="store_true",
+                    help="skip the telemetry-overhead benchmark")
     ap.add_argument("--skip-sharded", action="store_true",
                     help="skip the sharded-vs-single engine benchmark")
     ap.add_argument("--skip-fedmodel", action="store_true",
@@ -130,6 +132,17 @@ def main() -> None:
         for k in ("ingest_events_per_sec", "rounds_per_sec_under_traffic",
                   "rounds_per_sec_blocking", "service_overhead_fraction",
                   "snapshot_ms", "snapshot_to_disk_ms"):
+            print(f"{k},{res[k]}")
+        print(f"# merged into {args.stream_json}")
+        sys.stdout.flush()
+
+    if not args.skip_telemetry:
+        from benchmarks.telemetry_bench import main as telemetry_main
+        res = telemetry_main(args.stream_json)
+        print("\n# telemetry: metric,value")
+        for k in ("rounds_per_sec_disabled", "rounds_per_sec_enabled",
+                  "rounds_overhead_fraction", "events_per_sec_disabled",
+                  "events_per_sec_enabled", "events_overhead_fraction"):
             print(f"{k},{res[k]}")
         print(f"# merged into {args.stream_json}")
         sys.stdout.flush()

@@ -1,0 +1,138 @@
+"""Telemetry overhead benchmark: what instrumentation costs when on,
+and that it costs (almost) nothing when off.
+
+The observability plane (src/repro/obs/) is threaded through every hot
+path — engine spans, scheduler event application, service iterations —
+behind a null-object default.  Two questions decide whether that design
+holds up:
+
+  * disabled: rounds/sec and events/sec with the default NullTelemetry
+    must match an uninstrumented scheduler (the null path is a handful
+    of attribute loads and ``enabled`` checks per round);
+  * enabled: the full plane (span ring buffer, histogram observes, the
+    per-round FedObserver numpy work) should cost a bounded fraction of
+    a round — it runs on the host while the device does the real work.
+
+Plus primitive micro-rates (counter inc, histogram observe, span
+enter/exit) so a regression can be localized to one primitive.
+
+Merged into BENCH_stream.json (under "telemetry").
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.core.participation import TRACES
+from repro.fed.scenarios import build_scheduler, make_scenario
+from repro.obs import Telemetry
+
+NO_EVAL = 10 ** 9
+
+
+def _scheduler(telemetry=None, seed=0, chunk=8):
+    sc = make_scenario("flash-crowd", seed=seed)
+    sch = build_scheduler(sc, chunk_size=chunk, telemetry=telemetry)
+    sch._queue.clear()
+    return sch
+
+
+def _warm(sch, chunk=8):
+    r = 1
+    while r <= chunk:
+        sch.run(r, eval_every=NO_EVAL)
+        r *= 2
+
+
+def bench_rounds(telemetry, rounds=96, reps=3, seed=0):
+    """Best-of-reps rounds/sec for blocking event-free spans."""
+    sch = _scheduler(telemetry, seed=seed)
+    _warm(sch)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        sch.run(rounds, eval_every=NO_EVAL)
+        best = min(best, time.perf_counter() - t0)
+    return rounds / best
+
+
+def bench_events(telemetry, n_events=240, seed=0):
+    """Events/sec absorbed at span boundaries: a trace-shift per round
+    forces the R=1 apply/restage path where observe_event and the
+    staleness histogram sit."""
+    from repro.fed.stream import TraceShift
+    sch = _scheduler(telemetry, seed=seed)
+    _warm(sch)
+    n_clients = len(sch.clients)
+    base = sch._next_tau
+    sch.push(*[TraceShift(base + j, client_id=j % n_clients,
+                          trace=TRACES[j % 8])
+               for j in range(n_events)])
+    t0 = time.perf_counter()
+    sch.run(n_events, eval_every=NO_EVAL)
+    wall = time.perf_counter() - t0
+    return n_events / wall
+
+
+def bench_primitives(n=100_000):
+    """Micro-rates of the registry/tracer primitives (ops/sec)."""
+    tel = Telemetry()
+    c = tel.counter("bench_counter_total")
+    h = tel.histogram("bench_hist_seconds")
+    t0 = time.perf_counter()
+    for _ in range(n):
+        c.inc()
+    counter_rate = n / (time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        h.observe(1e-3)
+    hist_rate = n / (time.perf_counter() - t0)
+    m = n // 10
+    t0 = time.perf_counter()
+    for _ in range(m):
+        with tel.span("bench.span"):
+            pass
+    span_rate = m / (time.perf_counter() - t0)
+    return {"counter_inc_per_sec": round(counter_rate),
+            "histogram_observe_per_sec": round(hist_rate),
+            "span_per_sec": round(span_rate)}
+
+
+def run(seed=0):
+    rps_off = bench_rounds(None, seed=seed)
+    rps_on = bench_rounds(Telemetry(), seed=seed)
+    eps_off = bench_events(None, seed=seed)
+    eps_on = bench_events(Telemetry(), seed=seed)
+    return {
+        "config": {"scenario": "flash-crowd",
+                   "backend": jax.default_backend()},
+        "rounds_per_sec_disabled": round(rps_off, 2),
+        "rounds_per_sec_enabled": round(rps_on, 2),
+        "rounds_overhead_fraction": round(
+            max(0.0, 1.0 - rps_on / rps_off), 4),
+        "events_per_sec_disabled": round(eps_off, 1),
+        "events_per_sec_enabled": round(eps_on, 1),
+        "events_overhead_fraction": round(
+            max(0.0, 1.0 - eps_on / eps_off), 4),
+        "primitives": bench_primitives(),
+    }
+
+
+def main(path="BENCH_stream.json", **kw):
+    res = run(**kw)
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+    merged["telemetry"] = res
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2)
+        f.write("\n")
+    return res
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=2))

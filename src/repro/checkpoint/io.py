@@ -39,6 +39,8 @@ import os
 import jax
 import numpy as np
 
+from repro.obs.telemetry import resolve as resolve_telemetry
+
 _ARRAY_KEY = "__npz__"
 _TUPLE_KEY = "__tuple__"
 
@@ -283,7 +285,8 @@ def _verify_npz(path: str, manifest: dict) -> None:
 
 def save_fed_checkpoint(path: str, params, state: dict, *,
                         history: dict = None, config: dict = None,
-                        extra: dict = None, injector=None) -> None:
+                        extra: dict = None, injector=None,
+                        telemetry=None) -> None:
     """Persist a federation run's complete restart state.
 
     ``state`` is FedState.to_dict() (plain data + ndarrays; the pending
@@ -300,50 +303,72 @@ def save_fed_checkpoint(path: str, params, state: dict, *,
     previous checkpoint loadable.  ``injector`` is the fault hook
     (fed/faults.py): injected write failures raise before the rename,
     injected corruption flips bytes after it (caught at load time)."""
-    os.makedirs(path, exist_ok=True)
-    flat = _flatten(params)
-    arrays = {f"params/{k}": np.asarray(jax.device_get(v))
-              for k, v in flat.items()}
-    manifest = {
-        "format": "fed-checkpoint-v1",
-        "state": jsonify_tree(state, arrays, prefix="blob/state"),
-        "history": (jsonify_tree(history, arrays, prefix="blob/history")
-                    if history is not None else None),
-        "config": config or {},
-        "extra": extra or {},
-        "param_keys": sorted(flat),
-    }
-    enc, dtypes = _encode_arrays(arrays)
-    npz_path = os.path.join(path, "fed_checkpoint.npz")
-    sha = _atomic_savez(npz_path, enc, injector=injector)
-    manifest["array_dtypes"] = dtypes
-    manifest["npz_sha256"] = sha
-    _atomic_write_text(os.path.join(path, "fed_manifest.json"),
-                       json.dumps(manifest, indent=2))
-    if injector is not None:
-        injector.fire("ckpt_written", path=npz_path)
+    tel = resolve_telemetry(telemetry)
+    with tel.span("ckpt.save", path=path):
+        os.makedirs(path, exist_ok=True)
+        flat = _flatten(params)
+        arrays = {f"params/{k}": np.asarray(jax.device_get(v))
+                  for k, v in flat.items()}
+        manifest = {
+            "format": "fed-checkpoint-v1",
+            "state": jsonify_tree(state, arrays, prefix="blob/state"),
+            "history": (jsonify_tree(history, arrays,
+                                     prefix="blob/history")
+                        if history is not None else None),
+            "config": config or {},
+            "extra": extra or {},
+            "param_keys": sorted(flat),
+        }
+        enc, dtypes = _encode_arrays(arrays)
+        npz_path = os.path.join(path, "fed_checkpoint.npz")
+        sha = _atomic_savez(npz_path, enc, injector=injector)
+        manifest["array_dtypes"] = dtypes
+        manifest["npz_sha256"] = sha
+        _atomic_write_text(os.path.join(path, "fed_manifest.json"),
+                           json.dumps(manifest, indent=2))
+        tel.counter("ckpt_saves_total",
+                    "fed checkpoints written").inc()
+        tel.counter("ckpt_save_bytes_total",
+                    "npz bytes written by fed checkpoint saves").inc(
+            os.path.getsize(npz_path))
+        if injector is not None:
+            injector.fire("ckpt_written", path=npz_path)
 
 
-def load_fed_checkpoint(path: str, verify: bool = True):
+def load_fed_checkpoint(path: str, verify: bool = True, telemetry=None):
     """Returns (params, state_dict, history_dict, config, extra).
 
     Raises CorruptCheckpointError when the manifest is unreadable, the
     npz fails its recorded checksum, or the payload cannot be parsed —
     callers (the service supervisor) roll back to an older snapshot."""
-    manifest = _read_manifest(os.path.join(path, "fed_manifest.json"))
-    if manifest.get("format") != "fed-checkpoint-v1":
-        raise CorruptCheckpointError(
-            f"not a fed checkpoint: {path!r} "
-            f"({manifest.get('format')!r})")
+    tel = resolve_telemetry(telemetry)
     npz_path = os.path.join(path, "fed_checkpoint.npz")
-    if verify:
-        _verify_npz(npz_path, manifest)
-    arrays = _decode_arrays(_read_npz(npz_path),
-                            manifest.get("array_dtypes"))
-    params = _unflatten({k[len("params/"):]: v
-                         for k, v in arrays.items()
-                         if k.startswith("params/")})
-    state = dejsonify_tree(manifest["state"], arrays)
-    history = (dejsonify_tree(manifest["history"], arrays)
-               if manifest["history"] is not None else None)
+    with tel.span("ckpt.load", path=path):
+        try:
+            manifest = _read_manifest(
+                os.path.join(path, "fed_manifest.json"))
+            if manifest.get("format") != "fed-checkpoint-v1":
+                raise CorruptCheckpointError(
+                    f"not a fed checkpoint: {path!r} "
+                    f"({manifest.get('format')!r})")
+            if verify:
+                _verify_npz(npz_path, manifest)
+            arrays = _decode_arrays(_read_npz(npz_path),
+                                    manifest.get("array_dtypes"))
+        except CorruptCheckpointError:
+            tel.counter("ckpt_checksum_failures_total",
+                        "fed checkpoint loads rejected as corrupt "
+                        "(bad checksum / unreadable payload)").inc()
+            raise
+        params = _unflatten({k[len("params/"):]: v
+                             for k, v in arrays.items()
+                             if k.startswith("params/")})
+        state = dejsonify_tree(manifest["state"], arrays)
+        history = (dejsonify_tree(manifest["history"], arrays)
+                   if manifest["history"] is not None else None)
+        tel.counter("ckpt_loads_total",
+                    "fed checkpoints loaded").inc()
+        tel.counter("ckpt_load_bytes_total",
+                    "npz bytes read by fed checkpoint loads").inc(
+            os.path.getsize(npz_path))
     return params, state, history, manifest["config"], manifest["extra"]

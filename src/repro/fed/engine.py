@@ -48,6 +48,7 @@ Usage::
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional
 
@@ -58,6 +59,7 @@ import numpy as np
 from repro.core.aggregation import scheme_coefficients
 from repro.core.fed_step import fed_round_parallel, fed_round_sequential
 from repro.fed.task import ArrayTask
+from repro.obs.telemetry import resolve as resolve_telemetry
 
 
 def _pow2_chunks(n: int, cap: int):
@@ -242,7 +244,8 @@ class RoundEngine:
                  with_metrics: bool = False,
                  capacity: Optional[int] = None,
                  max_samples: Optional[int] = None,
-                 sharding=None, mode: str = "client_parallel"):
+                 sharding=None, mode: str = "client_parallel",
+                 telemetry=None):
         if (task is None) == (loss_fn is None):
             raise ValueError("pass exactly one of task= or loss_fn=")
         if task is None:
@@ -327,6 +330,17 @@ class RoundEngine:
         self.trace_count = 0      # bumped at chunk trace time (see _get_fn)
         self._pspecs = None
         self._pspecs_built = False
+        # telemetry (repro.obs): null by default — spans and counters on
+        # this path are shared no-ops, so uninstrumented runs stay
+        # bit-identical (pinned by tests/test_telemetry.py)
+        self.telemetry = tel = resolve_telemetry(telemetry)
+        self._m_traces = tel.counter(
+            "engine_traces_total",
+            "jitted chunk (re)traces — actual scan compiles")
+        self._m_spans = tel.counter(
+            "engine_spans_total", "run_span dispatches")
+        self._m_rounds = tel.counter(
+            "engine_rounds_total", "rounds executed by run_span")
 
     def _client_rows(self, client):
         """The task's per-sample arrays for one client, shape-checked
@@ -392,15 +406,16 @@ class RoundEngine:
         are static, so no compiled span scan is invalidated."""
         if not 0 <= slot < self.capacity:
             raise IndexError(f"slot {slot} out of range [0, {self.capacity})")
-        rows = self._staged_rows(client)
-        s = jnp.int32(slot)
-        for name, row in rows.items():
-            self.data[name] = _slot_write(self.data[name],
-                                          self._put_row(row), s)
-        self.n = _slot_write(self.n, jnp.int32(client.n), s)
-        self.s_cdf = _slot_write(
-            self.s_cdf, self._put_row(trace_cdf_row(client.trace, self.E)),
-            s)
+        with self.telemetry.span("engine.admit", slot=slot):
+            rows = self._staged_rows(client)
+            s = jnp.int32(slot)
+            for name, row in rows.items():
+                self.data[name] = _slot_write(self.data[name],
+                                              self._put_row(row), s)
+            self.n = _slot_write(self.n, jnp.int32(client.n), s)
+            self.s_cdf = _slot_write(
+                self.s_cdf,
+                self._put_row(trace_cdf_row(client.trace, self.E)), s)
 
     def _staged_rows(self, client):
         """Zero-padded (Nmax, *spec.shape) rows for every task buffer."""
@@ -435,6 +450,10 @@ class RoundEngine:
         if len(assignments) == 1:
             self.admit(*assignments[0])
             return
+        with self.telemetry.span("engine.admit_many", k=len(assignments)):
+            self._admit_many(assignments)
+
+    def _admit_many(self, assignments) -> None:
         for slot, _ in assignments:
             if not 0 <= slot < self.capacity:
                 raise IndexError(
@@ -469,18 +488,20 @@ class RoundEngine:
         admit overwrites it."""
         if not 0 <= slot < self.capacity:
             raise IndexError(f"slot {slot} out of range [0, {self.capacity})")
-        s = jnp.int32(slot)
-        self.n = _slot_write(self.n, jnp.int32(1), s)
-        self.s_cdf = _slot_write(
-            self.s_cdf, self._put_row(empty_slot_cdf(self.E)), s)
+        with self.telemetry.span("engine.evict", slot=slot):
+            s = jnp.int32(slot)
+            self.n = _slot_write(self.n, jnp.int32(1), s)
+            self.s_cdf = _slot_write(
+                self.s_cdf, self._put_row(empty_slot_cdf(self.E)), s)
 
     def set_trace(self, slot: int, trace) -> None:
         """Swap the availability law of an occupied slot (TraceShift)."""
         if not 0 <= slot < self.capacity:
             raise IndexError(f"slot {slot} out of range [0, {self.capacity})")
-        self.s_cdf = _slot_write(
-            self.s_cdf, self._put_row(trace_cdf_row(trace, self.E)),
-            jnp.int32(slot))
+        with self.telemetry.span("engine.set_trace", slot=slot):
+            self.s_cdf = _slot_write(
+                self.s_cdf, self._put_row(trace_cdf_row(trace, self.E)),
+                jnp.int32(slot))
 
     # -- jitted chunk builders ------------------------------------------------
     def _round_core(self, params, data, alpha, idx, tau, p,
@@ -531,6 +552,7 @@ class RoundEngine:
                 # cache also keys on argument committed-ness, so its
                 # _cache_size() over-reports)
                 self.trace_count += 1
+                self._m_traces.inc()
 
                 def body(w, tau):
                     # per-round key: the draw for round tau is a pure
@@ -551,6 +573,7 @@ class RoundEngine:
             def chunk(params, data, alphas, idxs, taus, p,
                       rb_tau0, rb_boost, lr_shift):
                 self.trace_count += 1
+                self._m_traces.inc()
 
                 def body(w, xs):
                     alpha, idx, tau = xs
@@ -603,24 +626,34 @@ class RoundEngine:
                 alphas = fs.put_client(alphas, axis_dim=1)
                 idxs = fs.put_client(idxs, axis_dim=1)
 
+        tel = self.telemetry
+        self._m_spans.inc()
+        self._m_rounds.inc(n_rounds)
+        # optional jax profiler hook: a Telemetry built with
+        # jax_trace_dir= wraps every device dispatch (incl. the Pallas
+        # agg path) in a profiler trace for offline TensorBoard analysis
+        prof = (jax.profiler.trace(tel.jax_trace_dir)
+                if tel.jax_trace_dir else contextlib.nullcontext())
         ms, off, tau = [], 0, tau_start
-        for r in _pow2_chunks(n_rounds, self.chunk_size):
-            taus = jnp.arange(tau, tau + r, dtype=jnp.int32)
-            if plan is not None:
-                fn = self._get_fn(r, sampled=False)
-                params, m = fn(params, self.data,
-                               alphas[off:off + r], idxs[off:off + r],
-                               taus, p, rb_tau0, rb_boost, lr_shift)
-            else:
-                fn = self._get_fn(r, sampled=True)
-                # the base key passes through unchanged: per-round
-                # randomness folds tau inside the chunk body, so chunk
-                # splits never reuse (or re-shuffle) randomness
-                params, m = fn(params, self.data, self.n,
-                               self.s_cdf, key, active, taus, p,
-                               rb_tau0, rb_boost, lr_shift)
-            ms.append(jax.tree.map(np.asarray, m))
-            off += r
-            tau += r
+        with tel.span("engine.run_span", tau=tau_start,
+                      rounds=n_rounds), prof:
+            for r in _pow2_chunks(n_rounds, self.chunk_size):
+                taus = jnp.arange(tau, tau + r, dtype=jnp.int32)
+                if plan is not None:
+                    fn = self._get_fn(r, sampled=False)
+                    params, m = fn(params, self.data,
+                                   alphas[off:off + r], idxs[off:off + r],
+                                   taus, p, rb_tau0, rb_boost, lr_shift)
+                else:
+                    fn = self._get_fn(r, sampled=True)
+                    # the base key passes through unchanged: per-round
+                    # randomness folds tau inside the chunk body, so chunk
+                    # splits never reuse (or re-shuffle) randomness
+                    params, m = fn(params, self.data, self.n,
+                                   self.s_cdf, key, active, taus, p,
+                                   rb_tau0, rb_boost, lr_shift)
+                ms.append(jax.tree.map(np.asarray, m))
+                off += r
+                tau += r
         metrics = {k: np.concatenate([m[k] for m in ms]) for k in ms[0]}
         return params, metrics

@@ -111,6 +111,16 @@ class FaultPlan:
         self._rng = np.random.default_rng(self.seed)
         self._lock = threading.Lock()
         self.fired: List[Tuple[str, int, str]] = []
+        from repro.obs.telemetry import NULL
+        self._m_fired = NULL.counter("faults_fired_total")
+
+    def attach_telemetry(self, telemetry) -> None:
+        """Count fired faults on a live registry
+        (``faults_fired_total{site,kind}``); null-safe."""
+        from repro.obs.telemetry import resolve
+        self._m_fired = resolve(telemetry).counter(
+            "faults_fired_total", "injected faults fired, by site and "
+            "kind", labelnames=("site", "kind"))
 
     @classmethod
     def generate(cls, seed: int, *, spans: int = 12, saves: int = 6,
@@ -144,6 +154,7 @@ class FaultPlan:
             f = self._by_site.get((site, k))
             if f is not None:
                 self.fired.append((site, k, f.kind))
+                self._m_fired.labels(site, f.kind).inc()
             return f
 
     def fire(self, site: str, *, abort: Optional[threading.Event] = None,

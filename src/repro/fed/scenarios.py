@@ -205,7 +205,8 @@ def make_scenario(name: str, *, seed: int = 0, **kwargs) -> Scenario:
 
 def build_scheduler(sc: Scenario, *, mode: str = "device",
                     chunk_size: int = 16, agg: str = "auto",
-                    interpret=None, with_metrics: bool = False):
+                    interpret=None, with_metrics: bool = False,
+                    telemetry=None):
     """StreamScheduler for a scenario on the paper's SYNTHETIC logreg."""
     import jax
 
@@ -221,7 +222,7 @@ def build_scheduler(sc: Scenario, *, mode: str = "device",
         local_epochs=sc.local_epochs, batch_size=sc.batch_size,
         scheme=sc.scheme, eta0=sc.eta0, chunk_size=chunk_size, agg=agg,
         interpret=interpret, with_metrics=with_metrics, seed=sc.seed,
-        mode=mode, events=sc.events)
+        mode=mode, events=sc.events, telemetry=telemetry)
 
 
 def _paper_eval_fn():

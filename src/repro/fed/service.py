@@ -76,6 +76,8 @@ from typing import Callable, List, Optional, Tuple
 from repro.checkpoint import CorruptCheckpointError
 from repro.fed.events import ParticipationEvent, TraceShift
 from repro.fed.stream import StreamScheduler
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.telemetry import resolve as resolve_telemetry
 
 _QUEUE_POLICIES = ("none", "merge-stale")
 
@@ -110,7 +112,9 @@ class FederationService:
                  max_queue: int = 1024,
                  injector=None,
                  engine_factory: Optional[Callable] = None,
-                 restore_kwargs: Optional[dict] = None):
+                 restore_kwargs: Optional[dict] = None,
+                 warmup_factor: float = 10.0,
+                 telemetry=None):
         if span_rounds < 1:
             raise ValueError(f"span_rounds must be >= 1, got {span_rounds}")
         if queue_policy not in _QUEUE_POLICIES:
@@ -123,9 +127,12 @@ class FederationService:
         self.span_rounds = span_rounds
         self.eval_every = eval_every
         self.max_rounds = max_rounds
-        self._inbox: "queue.Queue[ParticipationEvent]" = queue.Queue(
-            maxsize=max_pending)
+        # inbox items are (t_submit, event): the monotonic submit stamp
+        # feeds the svc_ingest_lag_seconds histogram
+        self._inbox: "queue.Queue[Tuple[float, ParticipationEvent]]" = \
+            queue.Queue(maxsize=max_pending)
         self._idle_sleep = idle_sleep
+        self.warmup_factor = warmup_factor
         # supervision config
         self._supervised = supervise
         self.snapshot_dir = snapshot_dir
@@ -151,17 +158,26 @@ class FederationService:
         # waiters get their own condition so they never contend with (or
         # deadlock against a hung holder of) the span lock
         self._wait_cv = threading.Condition(threading.Lock())
-        # producers never take the span lock (a span in flight would
-        # stall ingestion); the submission counter gets its own tiny lock
-        self._submit_lock = threading.Lock()
         self._stop = threading.Event()
+        # the worker parks on this instead of sleep-polling: submit(),
+        # resume(), stop() and recovery set it, so an idle (paused or
+        # budget-reached) worker reacts to news immediately instead of on
+        # the next poll tick
+        self._wake = threading.Event()
         self._paused = threading.Event()
         self._worker: Optional[threading.Thread] = None
         self._supervisor: Optional[threading.Thread] = None
         self._worker_died = threading.Event()
-        self._died: Optional[Tuple[int, BaseException]] = None
+        # (generation, error, monotonic death time) — the stamp feeds the
+        # recovery record's detect_latency_s
+        self._died: Optional[Tuple[int, BaseException, float]] = None
         self._error: Optional[BaseException] = None
         self._heartbeat = time.monotonic()
+        # spans completed by the CURRENT generation: the watchdog grants
+        # a warmup grace (warmup_factor * span_timeout) until the first
+        # span lands, because a first span legitimately spends seconds in
+        # jax compilation — indistinguishable from a hang by heartbeat
+        self._gen_spans = 0
         # snapshot/journal bookkeeping (guarded by _snap_lock)
         self._snap_lock = threading.Lock()
         self._snapshots: List[Tuple[int, str]] = []   # (epoch, path)
@@ -171,14 +187,99 @@ class FederationService:
         self._delayed: List[ParticipationEvent] = []
         self._fail_streak = 0
         self.recoveries: List[dict] = []
-        self.snapshot_failures = 0
-        self.events_submitted = 0
-        self.events_ingested = 0
-        self.events_merged = 0
-        self.events_duplicated = 0
-        self.events_delayed = 0
-        self.events_flooded = 0
-        self.spans_run = 0
+
+        # telemetry: default to the scheduler's own telemetry so one
+        # wiring point covers the whole stack.  The service counters are
+        # *functional* state (drain() compares them), so with a null
+        # telemetry they live on a private registry — same code path,
+        # nothing rendered
+        self.telemetry = tel = resolve_telemetry(
+            telemetry if telemetry is not None
+            else getattr(scheduler, "telemetry", None))
+        reg = tel.registry if tel.enabled else MetricsRegistry()
+        self._registry = reg
+        if (tel.enabled and self._injector is not None
+                and hasattr(self._injector, "attach_telemetry")):
+            self._injector.attach_telemetry(tel)
+        self._c_submitted = reg.counter(
+            "svc_events_submitted_total", "events accepted by submit()")
+        self._c_ingested = reg.counter(
+            "svc_events_ingested_total",
+            "events handed from the inbox to the scheduler")
+        self._c_merged = reg.counter(
+            "svc_events_merged_total",
+            "events dropped/compacted by the merge-stale queue policy")
+        self._c_duplicated = reg.counter(
+            "svc_events_duplicated_total",
+            "events delivered twice by an injected ingest fault")
+        self._c_delayed = reg.counter(
+            "svc_events_delayed_total",
+            "events held back one ingest cycle by an injected fault")
+        self._c_flooded = reg.counter(
+            "svc_events_flooded_total",
+            "stale events pushed by injected floods")
+        self._c_spans = reg.counter(
+            "svc_spans_total", "scheduler spans run by the worker")
+        self._c_snap_failures = reg.counter(
+            "svc_snapshot_failures_total",
+            "periodic snapshots that failed to write")
+        self._c_recoveries = reg.counter(
+            "svc_recoveries_total", "supervised recoveries completed")
+        self._c_busy = reg.counter(
+            "svc_busy_seconds_total",
+            "worker wall time inside scheduler spans")
+        self._c_idle = reg.counter(
+            "svc_idle_seconds_total",
+            "worker wall time parked waiting for work")
+        self._c_overhead = reg.counter(
+            "svc_overhead_seconds_total",
+            "worker wall time in per-iteration service bookkeeping "
+            "(locking, ingest, notify) — neither spans nor idle waits")
+        self._g_inbox = reg.gauge(
+            "svc_inbox_depth", "events waiting in the bounded inbox")
+        self._g_heartbeat = reg.gauge(
+            "svc_heartbeat_age_s",
+            "seconds since the worker's last heartbeat (set on read)")
+        self._g_generation = reg.gauge(
+            "svc_generation", "current worker generation")
+        self._h_lag = reg.histogram(
+            "svc_ingest_lag_seconds",
+            "submit()-to-scheduler latency per event")
+        self._h_recovery = reg.histogram(
+            "svc_recovery_seconds", "supervised recovery wall time (MTTR)")
+
+    # -- registry-backed counters (the pre-telemetry public surface) ----------
+    @property
+    def events_submitted(self) -> int:
+        return int(self._c_submitted.value)
+
+    @property
+    def events_ingested(self) -> int:
+        return int(self._c_ingested.value)
+
+    @property
+    def events_merged(self) -> int:
+        return int(self._c_merged.value)
+
+    @property
+    def events_duplicated(self) -> int:
+        return int(self._c_duplicated.value)
+
+    @property
+    def events_delayed(self) -> int:
+        return int(self._c_delayed.value)
+
+    @property
+    def events_flooded(self) -> int:
+        return int(self._c_flooded.value)
+
+    @property
+    def spans_run(self) -> int:
+        return int(self._c_spans.value)
+
+    @property
+    def snapshot_failures(self) -> int:
+        return int(self._c_snap_failures.value)
 
     # -- lifecycle ------------------------------------------------------------
     def start(self) -> "FederationService":
@@ -227,6 +328,7 @@ class FederationService:
             abort, worker = self._abort, self._worker
         abort.set()                          # release cooperative stalls
         self._worker_died.set()              # kick the supervisor awake
+        self._wake.set()                     # unpark an idle worker
         self._notify()                       # wake wait_rounds() callers
         if wait:
             if self._supervisor is not None:
@@ -268,30 +370,39 @@ class FederationService:
         if self._stop.is_set():
             raise RuntimeError("cannot submit to a stopped "
                                "FederationService")
+        ok = True
         for e in events:
             try:
-                self._inbox.put(e, block=block, timeout=timeout)
+                self._inbox.put((time.monotonic(), e), block=block,
+                                timeout=timeout)
             except queue.Full:
-                return False
-            with self._submit_lock:          # concurrent producers: the
-                self.events_submitted += 1   # += is not atomic, and
-            # drain() compares against this counter — a lost update
-            # would let it return with an event still in flight
-        return True
+                ok = False
+                break
+            # the registry counter's own lock makes the increment atomic
+            # under concurrent producers — drain() compares against it,
+            # so a lost update would report drained with an event still
+            # in flight
+            self._c_submitted.inc()
+        self._g_inbox.set(self._inbox.qsize())
+        self._wake.set()                     # a parked worker has news
+        return ok
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Wait until every submitted event has been handed to the
         scheduler (it may still be *pending* on the scheduler's own queue
         until its tau is reached).  True if drained within timeout."""
-        deadline = None if timeout is None else time.monotonic() + timeout
-        while self.events_ingested < self.events_submitted \
-                or not self._inbox.empty() or self._delayed:
-            if self._error is not None:
-                raise RuntimeError("federation worker died") from self._error
-            if deadline is not None and time.monotonic() > deadline:
-                return False
-            time.sleep(self._idle_sleep)
-        return True
+        def drained() -> bool:
+            return (self._error is not None
+                    or (self.events_ingested >= self.events_submitted
+                        and self._inbox.empty() and not self._delayed))
+
+        # condition-variable wait: the worker notifies after every ingest
+        # cycle that moved events, so this parks instead of sleep-polling
+        with self._wait_cv:
+            ok = self._wait_cv.wait_for(drained, timeout=timeout)
+        if self._error is not None:
+            raise RuntimeError("federation worker died") from self._error
+        return ok
 
     # -- control ---------------------------------------------------------------
     def pause(self) -> None:
@@ -316,6 +427,7 @@ class FederationService:
 
     def resume(self) -> None:
         self._paused.clear()
+        self._wake.set()
 
     def wait_rounds(self, n: int, timeout: Optional[float] = None) -> bool:
         """Block until the scheduler clock reaches round n."""
@@ -350,6 +462,11 @@ class FederationService:
 
     def stats(self) -> dict:
         sch = self.scheduler
+        # refresh the point-in-time gauges so a prom scrape taken right
+        # after stats() agrees with it
+        self._g_heartbeat.set(time.monotonic() - self._heartbeat)
+        self._g_generation.set(self._gen)
+        self._g_inbox.set(self._inbox.qsize())
         return {"rounds": sch._next_tau,
                 "spans_run": self.spans_run,
                 "events_submitted": self.events_submitted,
@@ -374,9 +491,14 @@ class FederationService:
     def chaos_report(self) -> dict:
         """Supervision outcome summary: one record per recovery (cause,
         epoch restored, snapshots skipped as corrupt, events replayed,
-        MTTR seconds) plus aggregate counters — the payload behind
-        ``fed_serve --chaos`` and BENCH_stream.json["chaos"]."""
+        detection latency, MTTR seconds) plus aggregate counters — the
+        payload behind ``fed_serve --chaos`` and
+        BENCH_stream.json["chaos"].  All durations come from
+        ``time.monotonic()`` — the same clock the tracing spans use, so
+        MTTR figures line up with ``svc.recover`` span timings."""
         mttrs = [r["mttr_s"] for r in self.recoveries]
+        detects = [r.get("detect_latency_s", 0.0)
+                   for r in self.recoveries]
         rec_rounds = sum(max(0, r["tau_at_failure"] - r["tau_resumed"])
                          for r in self.recoveries)
         report = {
@@ -384,6 +506,9 @@ class FederationService:
             "n_recoveries": len(self.recoveries),
             "mttr_mean_s": (sum(mttrs) / len(mttrs)) if mttrs else 0.0,
             "mttr_max_s": max(mttrs) if mttrs else 0.0,
+            "detect_latency_mean_s": (sum(detects) / len(detects)
+                                      if detects else 0.0),
+            "detect_latency_max_s": max(detects) if detects else 0.0,
             "recovered_rounds": int(rec_rounds),
             "snapshot_failures": self.snapshot_failures,
             "events_merged": self.events_merged,
@@ -403,11 +528,12 @@ class FederationService:
         """Hand one event to the scheduler, applying the queue policy."""
         if self.queue_policy == "merge-stale":
             if _is_stale_noop(sch.state, e):
-                self.events_merged += 1
+                self._c_merged.inc()
                 return
             sch.push(e)
             if sch.pending > self.max_queue:
-                self.events_merged += sch.state.compact_stale_traceshifts()
+                self._c_merged.inc(
+                    sch.state.compact_stale_traceshifts())
         else:
             sch.push(e)
 
@@ -417,7 +543,7 @@ class FederationService:
                 self._journal.append((self._epoch, e))
         self._push_event(sch, e)
         if count:
-            self.events_ingested += 1
+            self._c_ingested.inc()
 
     def _ingest(self, sch: StreamScheduler) -> int:
         """Move everything in the inbox (plus any fault-delayed holdbacks)
@@ -427,22 +553,27 @@ class FederationService:
         for e in held:
             self._accept(sch, e)
             n += 1
+        now = time.monotonic()
         while True:
             try:
-                e = self._inbox.get_nowait()
+                t_submit, e = self._inbox.get_nowait()
             except queue.Empty:
                 break
+            self._h_lag.observe(now - t_submit)
             f = (self._injector.fire("ingest")
                  if self._injector is not None else None)
             if f is not None and f.kind == "delay":
                 self._delayed.append(e)      # out-of-order: next cycle
-                self.events_delayed += 1
+                self._c_delayed.inc()
                 continue
             self._accept(sch, e)
             n += 1
             if f is not None and f.kind == "dup":
                 self._accept(sch, e, count=False)   # delivered twice
-                self.events_duplicated += 1
+                self._c_duplicated.inc()
+        if n:
+            self._g_inbox.set(self._inbox.qsize())
+            self._notify()   # drain() waits on the ingest high-water mark
         return n
 
     def _maybe_flood(self, sch: StreamScheduler) -> None:
@@ -453,21 +584,25 @@ class FederationService:
                                self._injector._rng)
             for ev in flood:
                 self._push_event(sch, ev)    # policy absorbs the stale
-            self.events_flooded += len(flood)
+            self._c_flooded.inc(len(flood))
 
     def _loop(self, gen: int, lock, abort: threading.Event,
               sch: StreamScheduler) -> None:
         """One worker generation.  Everything scheduler-touching uses the
         captured (lock, sch) pair: after a recovery, a released zombie of
         an old generation can only ever touch its own (discarded) pair."""
+        tel = self.telemetry
         try:
             while not self._stop.is_set() and not abort.is_set():
+                t_iter = time.monotonic()
                 if gen == self._gen:
-                    self._heartbeat = time.monotonic()
+                    self._heartbeat = t_iter
                 with lock:
                     if abort.is_set():
                         break
-                    self._ingest(sch)
+                    if not self._inbox.empty() or self._delayed:
+                        with tel.span("svc.ingest"):
+                            self._ingest(sch)
                     done = (self.max_rounds is not None
                             and sch._next_tau >= self.max_rounds)
                     if done:
@@ -484,8 +619,14 @@ class FederationService:
                         n = self.span_rounds
                         if self.max_rounds is not None:
                             n = min(n, self.max_rounds - sch._next_tau)
-                        sch.run(n, eval_every=self.eval_every)
-                        self.spans_run += 1
+                        t_span = time.monotonic()
+                        self._c_overhead.inc(t_span - t_iter)
+                        with tel.span("svc.span", gen=gen,
+                                      tau=int(sch._next_tau), rounds=n):
+                            sch.run(n, eval_every=self.eval_every)
+                        self._c_busy.inc(time.monotonic() - t_span)
+                        self._c_spans.inc()
+                        self._gen_spans += 1
                         self._fail_streak = 0
                         self._notify()
                         if (self._supervised
@@ -493,11 +634,17 @@ class FederationService:
                                 == 0):
                             self._auto_snapshot(sch)
                         continue
-                # paused or round budget reached: idle, keep ingesting
-                time.sleep(self._idle_sleep)
+                    self._c_overhead.inc(time.monotonic() - t_iter)
+                # paused or round budget reached: park until submit()/
+                # resume()/stop() wakes us (bounded fallback wait keeps
+                # fault-delayed holdbacks and missed wakeups moving)
+                t_park = time.monotonic()
+                self._wake.wait(timeout=0.05 if self._delayed else 0.25)
+                self._wake.clear()
+                self._c_idle.inc(time.monotonic() - t_park)
         except BaseException as e:
             if self._supervised:
-                self._died = (gen, e)
+                self._died = (gen, e, time.monotonic())
                 self._worker_died.set()      # hand off to the supervisor
             else:
                 self._error = e              # surface on control threads
@@ -513,9 +660,10 @@ class FederationService:
             epoch = self._epoch
         path = os.path.join(self.snapshot_dir, f"snap-{epoch:06d}")
         try:
-            sch.save(path)
+            with self.telemetry.span("svc.snapshot", epoch=epoch):
+                sch.save(path)
         except OSError:
-            self.snapshot_failures += 1
+            self._c_snap_failures.inc()
             shutil.rmtree(path, ignore_errors=True)
             return False
         with self._snap_lock:
@@ -547,18 +695,30 @@ class FederationService:
                 died = self._died
                 self._died = None
                 if died is not None:
-                    self._recover(died[0], died[1])
+                    # detection latency: death stamp -> recovery start,
+                    # same monotonic clock as the tracing spans
+                    self._recover(died[0], died[1],
+                                  detect_latency_s=time.monotonic()
+                                  - died[2])
                 continue
             if self.span_timeout is None:
                 continue
             with self._meta:
                 gen, worker = self._gen, self._worker
+            # warmup grace: until this generation completes its first
+            # span, heartbeat silence is more plausibly jax compilation
+            # (a restored scheduler retraces its span fns) than a hang —
+            # a tight span_timeout would otherwise fire a false-positive
+            # recovery storm on slow hosts
+            limit = (self.span_timeout if self._gen_spans > 0
+                     else self.span_timeout * max(1.0, self.warmup_factor))
             stale = time.monotonic() - self._heartbeat
             if (worker is not None and worker.is_alive()
-                    and stale > self.span_timeout):
+                    and stale > limit):
                 self._recover(gen, TimeoutError(
                     f"span watchdog: no worker heartbeat for "
-                    f"{stale:.2f}s (limit {self.span_timeout}s)"))
+                    f"{stale:.2f}s (limit {limit}s)"),
+                    detect_latency_s=stale - limit)
 
     def _give_up(self, err: BaseException) -> None:
         self._error = err
@@ -567,10 +727,13 @@ class FederationService:
             self._abort.set()
         self._notify()
 
-    def _recover(self, gen: int, err: BaseException) -> None:
+    def _recover(self, gen: int, err: BaseException,
+                 detect_latency_s: float = 0.0) -> None:
         """Supervisor-side recovery: abort+join generation ``gen``,
         restore the newest good snapshot, replay the journal tail, swap
-        in a fresh (scheduler, lock) pair and start generation gen+1."""
+        in a fresh (scheduler, lock) pair and start generation gen+1.
+        ``detect_latency_s`` is how long the failure went unnoticed
+        (death stamp / heartbeat limit -> now, monotonic clock)."""
         t0 = time.monotonic()
         with self._meta:
             if gen != self._gen or self._stop.is_set():
@@ -578,85 +741,97 @@ class FederationService:
             self._gen = gen + 1
             old_abort, old_worker = self._abort, self._worker
             old_sch = self.scheduler
-        old_abort.set()
-        self._notify()
-        if old_worker is not None:
-            old_worker.join(timeout=self.join_timeout)
-        joined = old_worker is None or not old_worker.is_alive()
-        tau_at_failure = int(old_sch._next_tau)
+        with self.telemetry.span("svc.recover", gen=gen):
+            old_abort.set()
+            self._notify()
+            if old_worker is not None:
+                old_worker.join(timeout=self.join_timeout)
+            joined = old_worker is None or not old_worker.is_alive()
+            tau_at_failure = int(old_sch._next_tau)
 
-        if self._fail_streak >= self.max_restarts:
-            self._give_up(err)
-            return
-        streak = self._fail_streak
-        self._fail_streak = streak + 1
-
-        # restore: newest snapshot first, fall back past corrupt ones
-        with self._snap_lock:
-            candidates = list(self._snapshots)
-        restored = None
-        restored_epoch = None
-        corrupt_skipped = []
-        engine_reused = False
-        for epoch, path in reversed(candidates):
-            # reusing the warm engine is only safe once the old worker is
-            # provably no longer driving it
-            eng = (self._engine_factory()
-                   if (joined and self._engine_factory is not None)
-                   else None)
-            try:
-                restored = StreamScheduler.restore(
-                    path, engine=eng, injector=self._injector,
-                    **self._restore_kwargs)
-                restored_epoch = epoch
-                engine_reused = eng is not None
-                break
-            except CorruptCheckpointError as ce:
-                corrupt_skipped.append({"path": path, "error": str(ce)})
-                continue
-            except Exception as re:
-                self._give_up(re)
+            if self._fail_streak >= self.max_restarts:
+                self._give_up(err)
                 return
-        if restored is None:
-            self._give_up(err if not corrupt_skipped else
-                          CorruptCheckpointError(
-                              "no restorable snapshot: all "
-                              f"{len(candidates)} candidates corrupt"))
-            return
+            streak = self._fail_streak
+            self._fail_streak = streak + 1
 
-        # replay the journal tail: events ingested after the restored
-        # snapshot was written are not inside it — push them again (the
-        # restored queue orders them by tau/seq exactly as before)
-        with self._snap_lock:
-            replay = ([e for tag, e in self._journal
-                       if tag > restored_epoch]
-                      if self._journal is not None else [])
-        for e in replay:
-            self._push_event(restored, e)
+            # restore: newest snapshot first, fall back past corrupt ones
+            with self._snap_lock:
+                candidates = list(self._snapshots)
+            rkw = dict(self._restore_kwargs)
+            if self.telemetry.enabled:
+                rkw.setdefault("telemetry", self.telemetry)
+            restored = None
+            restored_epoch = None
+            corrupt_skipped = []
+            engine_reused = False
+            for epoch, path in reversed(candidates):
+                # reusing the warm engine is only safe once the old
+                # worker is provably no longer driving it
+                eng = (self._engine_factory()
+                       if (joined and self._engine_factory is not None)
+                       else None)
+                try:
+                    restored = StreamScheduler.restore(
+                        path, engine=eng, injector=self._injector,
+                        **rkw)
+                    restored_epoch = epoch
+                    engine_reused = eng is not None
+                    break
+                except CorruptCheckpointError as ce:
+                    corrupt_skipped.append({"path": path,
+                                            "error": str(ce)})
+                    continue
+                except Exception as re:
+                    self._give_up(re)
+                    return
+            if restored is None:
+                self._give_up(err if not corrupt_skipped else
+                              CorruptCheckpointError(
+                                  "no restorable snapshot: all "
+                                  f"{len(candidates)} candidates "
+                                  "corrupt"))
+                return
 
-        new_lock = threading.RLock()
-        new_abort = threading.Event()
-        with self._meta:
-            self.scheduler = restored
-            self._lock = new_lock
-            self._abort = new_abort
-        self.recoveries.append({
-            "generation": gen + 1,
-            "cause": repr(err),
-            "tau_at_failure": tau_at_failure,
-            "tau_resumed": int(restored._next_tau),
-            "restored_epoch": restored_epoch,
-            "corrupt_skipped": corrupt_skipped,
-            "events_replayed": len(replay),
-            "worker_joined": joined,
-            "engine_reused": engine_reused,
-            "backoff_s": self.backoff0 * (2 ** streak),
-            "mttr_s": time.monotonic() - t0,
-        })
+            # replay the journal tail: events ingested after the restored
+            # snapshot was written are not inside it — push them again
+            # (the restored queue orders them by tau/seq exactly as
+            # before)
+            with self._snap_lock:
+                replay = ([e for tag, e in self._journal
+                           if tag > restored_epoch]
+                          if self._journal is not None else [])
+            for e in replay:
+                self._push_event(restored, e)
+
+            new_lock = threading.RLock()
+            new_abort = threading.Event()
+            with self._meta:
+                self.scheduler = restored
+                self._lock = new_lock
+                self._abort = new_abort
+            mttr = time.monotonic() - t0
+            self.recoveries.append({
+                "generation": gen + 1,
+                "cause": repr(err),
+                "detect_latency_s": max(0.0, float(detect_latency_s)),
+                "tau_at_failure": tau_at_failure,
+                "tau_resumed": int(restored._next_tau),
+                "restored_epoch": restored_epoch,
+                "corrupt_skipped": corrupt_skipped,
+                "events_replayed": len(replay),
+                "worker_joined": joined,
+                "engine_reused": engine_reused,
+                "backoff_s": self.backoff0 * (2 ** streak),
+                "mttr_s": mttr,
+            })
+            self._c_recoveries.inc()
+            self._h_recovery.observe(mttr)
         # exponential backoff before the restart (abortable by stop)
         if self._stop.wait(self.backoff0 * (2 ** streak)):
             return
         self._heartbeat = time.monotonic()
+        self._gen_spans = 0          # re-arm the watchdog warmup grace
         worker = threading.Thread(
             target=self._loop,
             args=(gen + 1, new_lock, new_abort, restored),
@@ -664,4 +839,5 @@ class FederationService:
         with self._meta:
             self._worker = worker
         worker.start()
+        self._wake.set()
         self._notify()

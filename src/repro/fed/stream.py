@@ -62,6 +62,8 @@ from repro.fed.events import (Arrival, Departure,  # noqa: F401
                               InactivityBurst, ParticipationEvent,
                               TraceShift)
 from repro.fed.state import FedState
+from repro.obs.fedmetrics import FedObserver
+from repro.obs.telemetry import resolve as resolve_telemetry
 
 
 class StreamScheduler:
@@ -107,10 +109,23 @@ class StreamScheduler:
                  objective: Optional[set] = None,
                  state: Optional[FedState] = None,
                  events: Sequence[ParticipationEvent] = (),
-                 injector=None, log_spans: bool = False):
+                 injector=None, log_spans: bool = False,
+                 telemetry=None):
         if mode not in ("device", "plan"):
             raise ValueError(f"mode must be device|plan, got {mode!r}")
         self.mode = mode
+        # telemetry (repro.obs): null default — a reused engine keeps its
+        # own telemetry; a freshly built one inherits the scheduler's
+        self.telemetry = resolve_telemetry(telemetry)
+        self.observer = FedObserver(self.telemetry)
+        self._m_applied = self.telemetry.counter(
+            "sched_spans_total", "event-free spans executed")
+        self._m_cache_hit = self.telemetry.counter(
+            "sched_eval_cache_hits_total",
+            "eval-array cache hits (objective unchanged)")
+        self._m_cache_miss = self.telemetry.counter(
+            "sched_eval_cache_miss_total",
+            "eval-array cache rebuilds (objective membership changed)")
         # fault-injection hook (fed/faults.py): fires site "sched_span"
         # at every span iteration so chaos tests can crash mid-run
         self.injector = injector
@@ -127,7 +142,7 @@ class StreamScheduler:
                 interpret=interpret, donate=donate,
                 with_metrics=with_metrics, capacity=capacity,
                 max_samples=max_samples, sharding=sharding,
-                mode=engine_mode)
+                mode=engine_mode, telemetry=telemetry)
         self.engine = engine
         self.E = engine.E
         self.B = engine.B
@@ -215,6 +230,17 @@ class StreamScheduler:
     # -- event application (executes FedState transitions on the engine) -----
     def _apply_events(self, tau: int) -> str:
         st = self.state
+        if not st.due(tau):
+            # fast path: nothing queued for this boundary — skip the
+            # span/observer machinery entirely (most boundaries)
+            if st.expire(tau):
+                self._dirty = True
+            return ""
+        with self.telemetry.span("sched.apply_events", tau=tau):
+            return self._apply_due_events(tau)
+
+    def _apply_due_events(self, tau: int) -> str:
+        st = self.state
         ev = ""
         # an arrival burst coalesces into one fused admit_many: slot
         # writes are deferred while consecutive admit actions accumulate,
@@ -230,6 +256,7 @@ class StreamScheduler:
             while st.due(tau):
                 e = st.pop_event()
                 s, actions = st.apply(e, tau)
+                self.observer.observe_event(e, tau)
                 for act in actions:
                     if act[0] == "admit":
                         admits.append((act[1], st.clients[act[2]]))
@@ -260,7 +287,9 @@ class StreamScheduler:
         and re-transfer every eval round."""
         version = self.state.objective_version
         if self._eval_cache is not None and self._eval_cache[0] == version:
+            self._m_cache_hit.inc()
             return self._eval_cache[1], self._eval_cache[2]
+        self._m_cache_miss.inc()
         xs = [self.clients[i].x_test for i in sorted(self.objective)
               if self.clients[i].x_test is not None]
         ys = [self.clients[i].y_test for i in sorted(self.objective)
@@ -310,19 +339,24 @@ class StreamScheduler:
                     reboot_boost=jnp.asarray(a["reboot_boost"]))
                 self._dirty = False
             kwargs = self._span_args
-            if self.mode == "device":
-                # the base key is never split: per-round randomness folds
-                # the round index on device, so the sample stream is
-                # invariant to span/chunk structure (resume parity)
-                self.params, m = eng.run_span(self.params, tau, R,
-                                              key=st.key, **kwargs)
-            else:
-                plans = [st.sample_plan(t, self.E, self.B)
-                         for t in range(tau, end)]
-                alphas = np.stack([pl[0] for pl in plans])
-                idxs = np.stack([pl[1] for pl in plans])
-                self.params, m = eng.run_span(self.params, tau, R,
-                                              plan=(alphas, idxs), **kwargs)
+            with self.telemetry.span("sched.run_span", tau=tau, rounds=R):
+                if self.mode == "device":
+                    # the base key is never split: per-round randomness
+                    # folds the round index on device, so the sample
+                    # stream is invariant to span/chunk structure
+                    # (resume parity)
+                    self.params, m = eng.run_span(self.params, tau, R,
+                                                  key=st.key, **kwargs)
+                else:
+                    plans = [st.sample_plan(t, self.E, self.B)
+                             for t in range(tau, end)]
+                    alphas = np.stack([pl[0] for pl in plans])
+                    idxs = np.stack([pl[1] for pl in plans])
+                    self.params, m = eng.run_span(self.params, tau, R,
+                                                  plan=(alphas, idxs),
+                                                  **kwargs)
+            self._m_applied.inc()
+            self.observer.observe_span(st, tau, m, eng.scheme, self.E)
             eval_last = (end - 1) % eval_every == 0 or (ev and R == 1)
             for j, t in enumerate(range(tau, end)):
                 loss = acc = float("nan")
@@ -356,7 +390,7 @@ class StreamScheduler:
             path, self.params, self.state.to_dict(),
             history=history_to_dict(self.history),
             config=self.engine_config(), extra=extra,
-            injector=self.injector)
+            injector=self.injector, telemetry=self.telemetry)
 
     @classmethod
     def restore(cls, path: str, *, loss_fn: Optional[Callable] = None,
@@ -364,7 +398,7 @@ class StreamScheduler:
                 evaluate: Optional[Callable] = None, sharding=None,
                 interpret=None, donate: Optional[bool] = None,
                 engine: Optional[RoundEngine] = None, injector=None,
-                log_spans: bool = False,
+                log_spans: bool = False, telemetry=None,
                 **overrides) -> "StreamScheduler":
         """Rebuild a scheduler from ``save()`` output: the engine is
         reconstructed from the persisted geometry, every occupied slot is
@@ -384,7 +418,7 @@ class StreamScheduler:
         snapshot."""
         from repro.checkpoint.io import load_fed_checkpoint
         params, state_dict, history, config, _extra = \
-            load_fed_checkpoint(path)
+            load_fed_checkpoint(path, telemetry=telemetry)
         state = FedState.from_dict(state_dict)
         cfg = dict(config)
         cfg.update(overrides)
@@ -400,7 +434,7 @@ class StreamScheduler:
                 agg=cfg["agg"], with_metrics=cfg["with_metrics"],
                 capacity=cfg["capacity"], max_samples=cfg["max_samples"],
                 sharding=sharding, interpret=interpret, donate=donate,
-                mode=cfg["engine_mode"])
+                mode=cfg["engine_mode"], telemetry=telemetry)
         else:
             if engine.capacity != cfg["capacity"]:
                 raise ValueError(
@@ -418,7 +452,8 @@ class StreamScheduler:
                   engine=engine, state=state, mode=cfg["mode"],
                   eval_fn=eval_fn, evaluate=evaluate,
                   history=history_from_dict(history),
-                  injector=injector, log_spans=log_spans)
+                  injector=injector, log_spans=log_spans,
+                  telemetry=telemetry)
         return sch
 
 

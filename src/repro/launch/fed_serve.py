@@ -144,8 +144,25 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None,
                     help="also write the summary to this path")
+    ap.add_argument("--top", action="store_true",
+                    help="attach the fed_top live view while serving "
+                         "(enables telemetry)")
+    ap.add_argument("--top-interval", type=float, default=1.0,
+                    help="fed_top refresh period in seconds")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the telemetry JSONL dump (spans + "
+                         "metrics) here when serving ends (enables "
+                         "telemetry)")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write the Prometheus text exposition here "
+                         "when serving ends (enables telemetry)")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
+
+    telemetry = None
+    if args.top or args.metrics_out or args.prom_out:
+        from repro.obs import Telemetry
+        telemetry = Telemetry()
 
     sc = make_scenario(args.scenario, seed=args.seed)
     if args.dump_trace:
@@ -164,18 +181,18 @@ def main(argv=None) -> dict:
         overrides = {} if args.mode is None else {"mode": args.mode}
         sch = StreamScheduler.restore(
             args.resume, loss_fn=_make_loss(), eval_fn=_paper_eval_fn(),
-            **overrides)
+            telemetry=telemetry, **overrides)
         rounds = sch._next_tau + rounds   # serve this many MORE rounds
         timed = []
     elif args.trace:
         sch = build_scheduler(
             _strip_events(sc), mode=args.mode or "device",
-            chunk_size=args.chunk_size)
+            chunk_size=args.chunk_size, telemetry=telemetry)
         timed = load_trace(args.trace)
     else:
         sch = build_scheduler(
             _strip_events(sc), mode=args.mode or "device",
-            chunk_size=args.chunk_size)
+            chunk_size=args.chunk_size, telemetry=telemetry)
         timed = [(j / args.events_per_sec, e) for j, e in
                  enumerate(sorted(sc.events, key=lambda e: e.tau))]
     start_tau = sch._next_tau             # 0 fresh; checkpoint tau resumed
@@ -204,8 +221,12 @@ def main(argv=None) -> dict:
     svc = FederationService(sch, span_rounds=args.span_rounds,
                             eval_every=eval_every, max_rounds=rounds,
                             max_pending=args.max_pending, **svc_kwargs)
+    top_stop = None
     t0 = time.perf_counter()
     with svc:
+        if args.top:
+            from repro.launch.fed_top import attach
+            _, top_stop = attach(svc, interval=args.top_interval)
         for at, e in timed:               # the main thread is the client
             delay = at - (time.perf_counter() - t0)
             if delay > 0:
@@ -215,6 +236,8 @@ def main(argv=None) -> dict:
         svc.wait_rounds(rounds, timeout=600)
         if args.snapshot:
             svc.snapshot(args.snapshot)
+        if top_stop is not None:
+            top_stop.set()
     wall = time.perf_counter() - t0
 
     sch = svc.scheduler                   # recovery may have rebuilt it
@@ -227,6 +250,16 @@ def main(argv=None) -> dict:
                       if k not in ("running", "paused")})
     if args.chaos is not None:
         summary["chaos"] = svc.chaos_report()
+    if telemetry is not None:
+        if args.metrics_out:
+            telemetry.dump_jsonl(args.metrics_out)
+        if args.prom_out:
+            telemetry.write_prom(args.prom_out)
+        summary["telemetry"] = {
+            "spans_recorded": telemetry.tracer.recorded,
+            "spans_dropped": telemetry.tracer.dropped,
+            "metrics_out": args.metrics_out,
+            "prom_out": args.prom_out}
     if not args.quiet:
         print(f"# served {served} rounds in {wall:.2f}s "
               f"({summary['rounds_per_sec']} rounds/s), "

@@ -41,8 +41,20 @@ def main(argv=None) -> dict:
     ap.add_argument("--restore", default=None, metavar="DIR",
                     help="resume a --save-state checkpoint and run "
                          "--rounds more rounds")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the telemetry JSONL dump (spans + "
+                         "metrics) here when the run ends (enables "
+                         "telemetry)")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write the Prometheus text exposition here "
+                         "when the run ends (enables telemetry)")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
+
+    telemetry = None
+    if args.metrics_out or args.prom_out:
+        from repro.obs import Telemetry
+        telemetry = Telemetry()
 
     sc = make_scenario(args.scenario, seed=args.seed)
     t0 = time.perf_counter()
@@ -58,6 +70,7 @@ def main(argv=None) -> dict:
         sch = StreamScheduler.restore(args.restore,
                                       loss_fn=make_loss_fn(SYNTHETIC_LR),
                                       eval_fn=_paper_eval_fn(),
+                                      telemetry=telemetry,
                                       **overrides)
         resumed_from = sch._next_tau
         sch.run(args.rounds if args.rounds is not None else sc.n_rounds,
@@ -73,9 +86,19 @@ def main(argv=None) -> dict:
         sch, summary = run_scenario(sc, mode=args.mode or "device",
                                     n_rounds=args.rounds,
                                     eval_every=args.eval_every,
-                                    chunk_size=args.chunk_size)
+                                    chunk_size=args.chunk_size,
+                                    telemetry=telemetry)
         rounds_ran = summary["rounds"]
     wall = time.perf_counter() - t0
+    if telemetry is not None:
+        if args.metrics_out:
+            telemetry.dump_jsonl(args.metrics_out)
+            if not args.quiet:
+                print(f"# telemetry JSONL written to {args.metrics_out}")
+        if args.prom_out:
+            telemetry.write_prom(args.prom_out)
+            if not args.quiet:
+                print(f"# prom exposition written to {args.prom_out}")
     if args.save_state:
         sch.save(args.save_state)
         if not args.quiet:
