@@ -1,6 +1,7 @@
-"""Robustness benchmark: event-stream fuzz corpus + supervised chaos soak.
+"""Robustness benchmark: event-stream fuzz corpus + supervised chaos soak
++ the theory-scored validation harness.
 
-Two numbers matter for the chaos-hardened service layer:
+The numbers that matter for the chaos-hardened service layer:
 
   * fuzz throughput — seeded interleavings/sec the invariant fuzzer
     (fed/fuzz.py) can execute against a pooled warm engine, and whether
@@ -12,13 +13,25 @@ Two numbers matter for the chaos-hardened service layer:
     write failure, checkpoint corruption, a 256-event stale flood) and
     must auto-recover with RoundRecord history and final params
     bit-identical to a fault-free run.  Reported: recoveries, mean/max
-    time-to-recover, rounds recomputed, snapshot failures absorbed.
+    time-to-recover, rounds recomputed, snapshot failures absorbed;
+  * validator throughput — fuzzed participation schedules executed on
+    closed-form quadratic federations under all three schemes and
+    scored against the Theorem 3.1 envelope + Table-1 ordering
+    (fed/validate.py);
+  * backend matrix — the same seeded op schedules cross-checked across
+    the client_parallel and client_sequential engines (the sharded
+    third backend needs a multi-device mesh; tests run it in a
+    subprocess);
+  * fuzzed chaos — generated fault plans against generated event
+    schedules through a real supervised service, bit-exact vs the
+    fault-free service run (fed.fuzz.run_chaos_corpus).
 
-Merged into BENCH_stream.json (under "fuzz" and "chaos") so the
+Merged into BENCH_stream.json (under "fuzz" — with "validator",
+"backends" and "fuzzed_chaos" sub-blocks — and "chaos") so the
 robustness trajectory lives next to the streaming numbers.
 
-  PYTHONPATH=src python -m benchmarks.fuzz_bench             # both
-  PYTHONPATH=src python -m benchmarks.run --skip-engine ...  # via run.py
+  PYTHONPATH=src python -m benchmarks.fuzz_bench             # all
+  PYTHONPATH=src python -m benchmarks.run --fuzz-seeds 16    # via run.py
 """
 from __future__ import annotations
 
@@ -145,10 +158,86 @@ def bench_chaos(plan_seed=7, rounds=32, verify=True):
     return report
 
 
+def bench_validator(n_seeds=4, rounds=64):
+    """Theory-scored validation throughput: each seed fuzzes a
+    participation schedule, runs it under schemes A/B/C on the quadratic
+    federation and scores every run against the Thm 3.1 envelope plus
+    the Table-1 ordering (raises on the first violating seed)."""
+    from repro.fed import QuadraticRunner, validate_corpus
+    t0 = time.perf_counter()
+    runner = QuadraticRunner()
+    runner.run("A", rounds=2)          # compile all three scheme engines
+    runner.run("B", rounds=2)
+    runner.run("C", rounds=2)
+    setup_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    agg = validate_corpus(range(n_seeds), runner=runner, rounds=rounds)
+    wall = time.perf_counter() - t0
+    return {
+        "n_seeds": n_seeds,
+        "rounds_per_run": rounds,
+        "setup_s": round(setup_s, 2),
+        "wall_s": round(wall, 2),
+        "runs_per_sec": round(3 * n_seeds / wall, 2),
+        "rounds_per_sec": round(agg["rounds"] / wall, 1),
+        "max_margin": agg["max_margin"],
+        "violations": 0,               # validate_corpus raises otherwise
+    }
+
+
+def bench_backends(n_seeds=6):
+    """Cross-backend parity throughput over the in-process backends."""
+    from repro.fed import run_backend_matrix
+    t0 = time.perf_counter()
+    agg = run_backend_matrix(range(n_seeds))
+    wall = time.perf_counter() - t0
+    return {
+        "n_seeds": n_seeds,
+        "backends": agg["backends"],
+        "wall_s": round(wall, 2),
+        "cases_per_sec": round(n_seeds / wall, 2),
+        "total_rounds": agg["rounds"],
+        "max_param_err": agg["max_param_err"],
+        "violations": 0,               # the matrix raises otherwise
+    }
+
+
+def bench_fuzzed_chaos(n_seeds=6):
+    """Generated fault plans x generated event schedules through a real
+    supervised service; every recovered run verified bit-exact against
+    the fault-free service run."""
+    from repro.fed import FuzzHarness, run_chaos_corpus
+    t0 = time.perf_counter()
+    harness = FuzzHarness()
+    setup_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    agg = run_chaos_corpus(range(n_seeds), harness=harness)
+    wall = time.perf_counter() - t0
+    return {
+        "n_seeds": n_seeds,
+        "harness_setup_s": round(setup_s, 2),
+        "wall_s": round(wall, 2),
+        "cases_per_sec": round(n_seeds / wall, 2),
+        "total_rounds": agg["rounds"],
+        "recoveries": agg["recoveries"],
+        "events_merged": agg["events_merged"],
+        "mttr_mean_s": round(agg["mttr_mean_s"], 3),
+        "mttr_max_s": round(agg["mttr_max_s"], 3),
+        "violations": 0,               # run_chaos_corpus raises otherwise
+    }
+
+
 def run(n_seeds=64, plan_seed=7, rounds=32):
+    # the auxiliary corpora scale down from the main fuzz corpus: each
+    # validator seed costs 3 x 64 engine rounds, each chaos seed a full
+    # supervised service lifecycle
+    fuzz = bench_fuzz(n_seeds=n_seeds)
+    fuzz["validator"] = bench_validator(n_seeds=max(2, n_seeds // 16))
+    fuzz["backends"] = bench_backends(n_seeds=max(4, n_seeds // 8))
+    fuzz["fuzzed_chaos"] = bench_fuzzed_chaos(n_seeds=max(4, n_seeds // 8))
     return {
         "config": {"backend": jax.default_backend()},
-        "fuzz": bench_fuzz(n_seeds=n_seeds),
+        "fuzz": fuzz,
         "chaos": bench_chaos(plan_seed=plan_seed, rounds=rounds),
     }
 

@@ -38,6 +38,10 @@ def main() -> None:
                     help="skip the concurrent-ingestion service benchmark")
     ap.add_argument("--skip-fuzz", action="store_true",
                     help="skip the invariant-fuzzer + chaos-soak benchmark")
+    ap.add_argument("--fuzz-seeds", type=int, default=None, metavar="N",
+                    help="fuzz corpus size (default: 48, or 128 with "
+                         "--full; the validator/backend/chaos corpora "
+                         "scale down from it)")
     ap.add_argument("--skip-telemetry", action="store_true",
                     help="skip the telemetry-overhead benchmark")
     ap.add_argument("--skip-sharded", action="store_true",
@@ -149,12 +153,26 @@ def main() -> None:
 
     if not args.skip_fuzz:
         from benchmarks.fuzz_bench import main as fuzz_main
-        n_seeds = 128 if args.full else 48
+        n_seeds = args.fuzz_seeds if args.fuzz_seeds is not None \
+            else (128 if args.full else 48)
         res = fuzz_main(args.stream_json, n_seeds=n_seeds)
         print("\n# fuzz: metric,value")
         for k in ("n_seeds", "cases_per_sec", "total_rounds",
                   "total_kills", "violations"):
             print(f"{k},{res['fuzz'][k]}")
+        print("# fuzz.validator: metric,value")
+        for k in ("n_seeds", "runs_per_sec", "rounds_per_sec",
+                  "max_margin", "violations"):
+            print(f"{k},{res['fuzz']['validator'][k]}")
+        print("# fuzz.backends: metric,value")
+        for k in ("n_seeds", "cases_per_sec", "max_param_err",
+                  "violations"):
+            print(f"{k},{res['fuzz']['backends'][k]}")
+        print("# fuzz.fuzzed_chaos: metric,value")
+        for k in ("n_seeds", "cases_per_sec", "recoveries",
+                  "events_merged", "mttr_mean_s", "mttr_max_s",
+                  "violations"):
+            print(f"{k},{res['fuzz']['fuzzed_chaos'][k]}")
         print("# chaos: metric,value")
         for k in ("n_recoveries", "mttr_mean_s", "mttr_max_s",
                   "recovered_rounds", "snapshot_failures",

@@ -49,6 +49,46 @@ def convergence_bound(tau: int, terms: BoundTerms, M_tau: float) -> float:
     return (M_tau * terms.D + terms.V) / (tau * terms.E + terms.gamma)
 
 
+def observed_participation_stats(scheme: str, p_rounds, s_rounds, E: int,
+                                 *, tol: float = 1e-6) -> dict:
+    """Plug-in estimates of Theorem 3.1's participation quantities from an
+    *executed* run's observed participation matrix, instead of the
+    Monte-Carlo forecast (aggregation.expected_coeff_stats).
+
+    p_rounds: (R, C) per-round data weights p^k (forward-filled span
+    args); s_rounds: (R, C) realized completed-epoch counts.  The
+    realized aggregation coefficients p_tau^k are recomputed per round
+    with `scheme_coefficients`, giving
+
+      E_ps[k] — empirical mean of p_tau^k s_tau^k over the run;
+      z[t]    — Assumption 3.5's per-round bias indicator: 1 where the
+                realized coefficient mass sum_k p_tau^k s_tau^k deviates
+                from the unbiased E * sum_k p^k (inactive objective
+                members, incomplete devices under scheme A/B, dropped
+                rounds);
+      M[t]    — the cumulative biased-round count; M[t] counts biased
+                rounds in [0, t], so Eq. (3) at round tau takes
+                M[tau - 1];
+      S       — sum_k E_ps[k] (the bound's S).
+    """
+    from repro.core.aggregation import scheme_coefficients
+
+    p = np.asarray(p_rounds, np.float64)
+    s = np.asarray(s_rounds, np.float64)
+    if p.shape != s.shape:
+        raise ValueError(f"p_rounds {p.shape} vs s_rounds {s.shape}")
+    ps = np.empty_like(p)
+    for t in range(len(p)):
+        c = np.asarray(scheme_coefficients(scheme, p[t], s[t], E),
+                       np.float64)
+        ps[t] = c * s[t]
+    E_ps = ps.mean(axis=0) if len(ps) else np.zeros(p.shape[-1])
+    z = (np.abs(ps.sum(axis=1) - E * p.sum(axis=1))
+         > tol * max(float(E), 1.0)).astype(np.float64)
+    return {"E_ps": E_ps, "z": z, "M": np.cumsum(z),
+            "S": float(E_ps.sum())}
+
+
 def objective_shift_offset(L: float, mu: float, n_l: float, n: float,
                            gamma_l: float, arrival: bool) -> float:
     """Theorem 3.2 bound on ||w* - w~*||."""

@@ -5,12 +5,17 @@ from repro.fed.events import (Arrival, Departure, InactivityBurst,
 from repro.fed.faults import (Fault, FaultPlan, InjectedFault,
                               InjectedWriteError)
 from repro.fed.fuzz import (FuzzHarness, InvariantViolation, generate_case,
-                            run_corpus, run_fuzz_case)
+                            make_backend_pool, run_backend_matrix,
+                            run_chaos_case, run_chaos_corpus, run_corpus,
+                            run_cross_backend_case, run_fuzz_case)
 from repro.fed.service import FederationService
 from repro.fed.sharding import FedSharding, make_fed_sharding
 from repro.fed.state import FedState
 from repro.fed.stream import StreamScheduler
 from repro.fed.task import ArrayTask, ClientTask, LMTask
+from repro.fed.validate import (QuadraticProblem, QuadraticRunner, RunDump,
+                                TheoryValidator, generate_participation_schedule,
+                                make_quadratic_problem, validate_corpus)
 
 __all__ = ["Client", "FederatedTrainer", "RoundRecord", "RoundEngine",
            "Arrival", "Departure", "InactivityBurst", "ParticipationEvent",
@@ -19,4 +24,8 @@ __all__ = ["Client", "FederatedTrainer", "RoundRecord", "RoundEngine",
            "FedState", "FederationService", "Fault", "FaultPlan",
            "InjectedFault", "InjectedWriteError", "FuzzHarness",
            "InvariantViolation", "generate_case", "run_corpus",
-           "run_fuzz_case"]
+           "run_fuzz_case", "make_backend_pool", "run_backend_matrix",
+           "run_cross_backend_case", "run_chaos_case", "run_chaos_corpus",
+           "QuadraticProblem", "QuadraticRunner", "RunDump",
+           "TheoryValidator", "generate_participation_schedule",
+           "make_quadratic_problem", "validate_corpus"]

@@ -125,11 +125,16 @@ class FaultPlan:
     @classmethod
     def generate(cls, seed: int, *, spans: int = 12, saves: int = 6,
                  hang_seconds: float = 30.0,
-                 flood_size: int = 256) -> "FaultPlan":
+                 flood_size: int = 256, hang: bool = True) -> "FaultPlan":
         """A reproducible mixed chaos plan: one worker crash, one mid-span
         crash, one hang, one write failure, one corruption and one flood,
         placed at seeded positions — the ``fed_serve --chaos <seed>``
-        profile."""
+        profile.
+
+        ``hang=False`` omits the worker hang (recovering a hang costs a
+        span-timeout of watchdog latency — the fuzzed-chaos tier-1
+        corpus trades that fault for wall-clock).  The rng draw order is
+        unchanged, so a seed names the same plan either way."""
         rng = np.random.default_rng(seed)
         worker_slots = rng.choice(max(spans, 4), size=3, replace=False)
         faults = [
@@ -144,6 +149,8 @@ class FaultPlan:
             Fault("flood", int(rng.integers(0, max(spans, 1))), "flood",
                   size=flood_size),
         ]
+        if not hang:
+            faults = [f for f in faults if f.kind != "hang"]
         return cls(faults=faults, seed=seed)
 
     # -- firing ---------------------------------------------------------------

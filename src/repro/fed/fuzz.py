@@ -35,11 +35,41 @@ of XLA compilation; re-staging slots costs milliseconds): each case evicts
 every slot and re-admits its own client set, which is exactly the
 restore-into-warm-engine path the supervised service uses for recovery.
 
+Beyond the single-engine invariants, two cross-cutting checks pool
+*multiple* executions of one case:
+
+  backend-parity   the same seeded op schedule runs on a pool of
+                   execution backends — client_parallel (the default
+                   fused path), client_sequential (the streaming
+                   accumulate path), and the sharded engine under a
+                   multi-device mesh (tests/_fuzz_backends_check.py
+                   re-execs with 4 virtual devices) — and every backend
+                   must produce the identical control-plane trajectory
+                   (tau/event/eta/n_active and the exact per-round epoch
+                   counts s: device sampling folds the round index, so
+                   the draw stream is backend-invariant) with final
+                   params equal to numerical tolerance (aggregation
+                   order differs across backends);
+  chaos-bitexact   fuzz cases double as *supervised chaos* workloads:
+                   the case's event schedule is submitted up-front to a
+                   real ``FederationService(supervise=True)`` while a
+                   seeded ``FaultPlan.generate`` schedule crashes the
+                   worker, tears spans mid-run, breaks and corrupts
+                   snapshots, and floods the queue — and the recovered
+                   history and params must be bit-identical to the
+                   fault-free service run (events are submitted before
+                   ``start()`` so the merge-stale ingest policy sees
+                   every event at the same ``next_tau`` in both runs —
+                   and in journal replay after a rollback).
+
 A violation raises InvariantViolation carrying the case seed — re-running
-``run_fuzz_case(harness, seed)`` replays the exact interleaving.
+``run_fuzz_case(harness, seed)`` (or ``run_chaos_case`` /
+``run_cross_backend_case``) replays the exact interleaving.
 
 tests/test_fuzz_invariants.py runs a fast corpus in tier-1;
 benchmarks/fuzz_bench.py (``run.py --fuzz``) runs the nightly-size one.
+fed/validate.py layers the Theorem 3.1 scoring on top (run/validate
+split — see docs/robustness.md).
 """
 from __future__ import annotations
 
@@ -214,7 +244,8 @@ class FuzzHarness:
                  n_arrival_pool: int = 4, local_epochs: int = 3,
                  batch_size: int = 5, chunk_size: int = 4,
                  max_samples: int = 60, scheme: str = "C",
-                 eta0: float = 1.0, data_seed: int = 0):
+                 eta0: float = 1.0, data_seed: int = 0,
+                 engine_mode: str = "client_parallel", sharding=None):
         from repro.configs.paper import SYNTHETIC_LR
         from repro.data import synthetic_federation
         from repro.fed.driver import Client
@@ -226,6 +257,7 @@ class FuzzHarness:
         self.E = local_epochs
         self.scheme = scheme
         self.eta0 = eta0
+        self.engine_mode = engine_mode
         cfg = SYNTHETIC_LR
         train, test = synthetic_federation(
             0.5, 0.5, n_founding + n_arrival_pool, seed=data_seed)
@@ -241,7 +273,8 @@ class FuzzHarness:
             loss_fn=self.loss_fn, clients=list(self.founding),
             local_epochs=local_epochs, batch_size=batch_size,
             scheme=scheme, eta0=eta0, chunk_size=chunk_size,
-            capacity=capacity, max_samples=max_samples)
+            capacity=capacity, max_samples=max_samples,
+            mode=engine_mode, sharding=sharding)
         # warm-up: a 7-round span chunks into 4+2+1, compiling every
         # pow2 chunk length the cases can produce — in both modes
         for mode in ("device", "plan"):
@@ -254,7 +287,8 @@ class FuzzHarness:
         return client_from_dict(client_to_dict(client))
 
     def new_scheduler(self, mode: str, *, state: Optional[FedState] = None,
-                      params=None, case_seed: int = 0) -> StreamScheduler:
+                      params=None, case_seed: int = 0,
+                      injector=None) -> StreamScheduler:
         """A scheduler over the pooled warm engine: evict every slot,
         re-stage the case's (or restored state's) occupancy.  Clients are
         cloned per scheduler — TraceShift mutates Client.trace in place,
@@ -267,14 +301,15 @@ class FuzzHarness:
             eng.admit_many(list(enumerate(founders)))
             return StreamScheduler(
                 clients=founders, init_params=self.init_params,
-                engine=eng, mode=mode, seed=case_seed, log_spans=True)
+                engine=eng, mode=mode, seed=case_seed, log_spans=True,
+                injector=injector)
         eng.admit_many(sorted(
             ((slot, state.clients[i])
              for i, slot in state.slot_of.items()),
             key=lambda sc: sc[0]))
         return StreamScheduler(
             init_params=jax.tree.map(jnp.asarray, params), engine=eng,
-            state=state, mode=mode, log_spans=True)
+            state=state, mode=mode, log_spans=True, injector=injector)
 
     def materialize(self, case: FuzzCase) -> List[Tuple]:
         """Codec dicts -> fresh event objects; negative Arrival ids are
@@ -332,10 +367,11 @@ def _execute(harness: FuzzHarness, case: FuzzCase, *, mode: str,
 
 # -- invariants ----------------------------------------------------------------
 
-def _check_exact_resume(seed: int, ref: dict, killed: dict) -> None:
+def _check_exact_resume(seed: int, ref: dict, killed: dict, *,
+                        invariant: str = "exact-resume") -> None:
     h1, h2 = ref["history"], killed["history"]
     if len(h1) != len(h2):
-        raise InvariantViolation(seed, "exact-resume",
+        raise InvariantViolation(seed, invariant,
                                  f"history length {len(h2)} != {len(h1)}")
     for r1, r2 in zip(h1, h2):
         if (r1.tau != r2.tau or r1.event != r2.event
@@ -343,13 +379,13 @@ def _check_exact_resume(seed: int, ref: dict, killed: dict) -> None:
                 or not np.array_equal(np.asarray(r1.s),
                                       np.asarray(r2.s))):
             raise InvariantViolation(
-                seed, "exact-resume",
+                seed, invariant,
                 f"round {r1.tau}: {r1} != {r2}")
     for a, b in zip(jax.tree.leaves(ref["params"]),
                     jax.tree.leaves(killed["params"])):
         if not np.array_equal(np.asarray(a), np.asarray(b)):
             raise InvariantViolation(
-                seed, "exact-resume",
+                seed, invariant,
                 f"final params differ (max |d|="
                 f"{np.max(np.abs(np.asarray(a) - np.asarray(b)))})")
 
@@ -437,6 +473,239 @@ def _check_plan_parity(seed: int, device: dict, plan: dict) -> None:
             or s1.slot_of != s2.slot_of):
         raise InvariantViolation(seed, "plan-parity",
                                  "final membership diverged")
+
+
+# -- backend cross-checking ----------------------------------------------------
+
+def make_backend_pool(backends=("client_parallel", "client_sequential"),
+                      *, sharding=None, **kw) -> dict:
+    """One warm FuzzHarness per execution backend, identical geometry
+    and data: "client_parallel" (fused vmap + flat Pallas agg),
+    "client_sequential" (streaming accumulate), "sharded" (the
+    client-axis sharded engine — pass sharding=, only meaningful under
+    a multi-device mesh; tests/_fuzz_backends_check.py re-execs with 4
+    virtual devices)."""
+    pool = {}
+    for b in backends:
+        if b == "sharded":
+            if sharding is None:
+                raise ValueError('backend "sharded" needs sharding=')
+            pool[b] = FuzzHarness(sharding=sharding, **kw)
+        else:
+            pool[b] = FuzzHarness(engine_mode=b, **kw)
+    return pool
+
+
+def _check_backend_parity(seed: int, backend: str, ref: dict,
+                          other: dict, *, atol: float = 5e-4,
+                          rtol: float = 5e-4) -> float:
+    """The same op schedule on two execution backends must walk one
+    trajectory: the control plane and the sampled epoch counts are
+    *exact* (device sampling folds the round index, so the draw stream
+    is invariant to how clients are executed or sharded); params agree
+    to numerical tolerance (aggregation order differs)."""
+    h1, h2 = ref["history"], other["history"]
+    if len(h1) != len(h2):
+        raise InvariantViolation(
+            seed, "backend-parity",
+            f"{backend}: history length {len(h2)} != {len(h1)}")
+    for r1, r2 in zip(h1, h2):
+        if (r1.tau != r2.tau or r1.event != r2.event
+                or r1.eta != r2.eta or r1.n_active != r2.n_active
+                or not np.array_equal(np.asarray(r1.s),
+                                      np.asarray(r2.s))):
+            raise InvariantViolation(
+                seed, "backend-parity",
+                f"{backend}: round {r1.tau}: {r1} != {r2}")
+    s1, s2 = ref["state"], other["state"]
+    if (s1.objective != s2.objective or s1.departed != s2.departed
+            or s1.slot_of != s2.slot_of):
+        raise InvariantViolation(
+            seed, "backend-parity",
+            f"{backend}: final membership diverged")
+    max_err = 0.0
+    for a, b in zip(jax.tree.leaves(ref["params"]),
+                    jax.tree.leaves(other["params"])):
+        a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+        max_err = max(max_err, float(np.max(np.abs(a - b))))
+        if not np.allclose(a, b, atol=atol, rtol=rtol):
+            raise InvariantViolation(
+                seed, "backend-parity",
+                f"{backend}: final params diverged "
+                f"(max |d|={np.max(np.abs(a - b)):.3g}, "
+                f"atol={atol}, rtol={rtol})")
+    return max_err
+
+
+def run_cross_backend_case(pool: dict, seed: int, *,
+                           reference: str = "client_parallel",
+                           mode: str = "device",
+                           case: Optional[FuzzCase] = None,
+                           atol: float = 5e-4,
+                           rtol: float = 5e-4) -> dict:
+    """Execute one seeded op schedule on every backend in the pool and
+    cross-check parity against the reference backend.  Kills are not
+    honored here (resume is a per-backend invariant covered by
+    run_fuzz_case); the schedule's event stream is."""
+    ref_h = pool[reference]
+    if case is None:
+        case = generate_case(seed, n_founding=ref_h.n_founding,
+                             capacity=ref_h.capacity,
+                             n_arrival_pool=ref_h.n_arrival_pool)
+    results = {}
+    for name, h in pool.items():
+        results[name] = _execute(h, case, mode=mode, honor_kills=False)
+        _check_zero_recompile(seed, h)
+    max_err = 0.0
+    for name in pool:
+        if name == reference:
+            continue
+        max_err = max(max_err, _check_backend_parity(
+            seed, name, results[reference], results[name],
+            atol=atol, rtol=rtol))
+    return {"seed": seed, "rounds": case.total_rounds,
+            "backends": sorted(pool), "max_param_err": max_err,
+            "events_applied":
+                results[reference]["state"].events_applied}
+
+
+def run_backend_matrix(seeds, *, pool: Optional[dict] = None,
+                       mode: str = "device", **pool_kw) -> dict:
+    """Cross-backend parity over a seed corpus — shared by the tier-1
+    subprocess check and benchmarks/fuzz_bench.py."""
+    if pool is None:
+        pool = make_backend_pool(**pool_kw)
+    rows = [run_cross_backend_case(pool, int(s), mode=mode)
+            for s in seeds]
+    return {"cases": len(rows),
+            "backends": sorted(pool),
+            "rounds": int(sum(r["rounds"] for r in rows)),
+            "max_param_err": max((r["max_param_err"] for r in rows),
+                                 default=0.0),
+            "per_case": rows}
+
+
+# -- fuzzed supervised chaos ---------------------------------------------------
+
+def run_chaos_case(harness: FuzzHarness, seed: int, *,
+                   span_rounds: int = 4, hang: bool = False,
+                   span_timeout: float = 2.0, snapshot_every: int = 1,
+                   flood_size: int = 64, plan=None,
+                   case: Optional[FuzzCase] = None,
+                   timeout: float = 300.0) -> dict:
+    """One fuzz case as a *supervised chaos* workload: the generator's
+    event schedule is submitted to a real FederationService while a
+    seeded FaultPlan (worker crashes, mid-span tears, snapshot
+    write-failure + corruption, stale floods; optional hangs) fires
+    against the supervision layer — and the recovered run must be
+    bit-identical to the fault-free service run.
+
+    Both runs submit every event *before* start() and use the
+    merge-stale queue policy: ingest (and journal replay after a
+    rollback) then sees each event at the same next_tau, so the
+    policy's drop decisions — which annotate history — are identical
+    by construction.  Kill ops in the case are ignored: the fault plan
+    owns failure injection here (that's the point)."""
+    import tempfile
+
+    from repro.fed.faults import Fault, FaultPlan
+    from repro.fed.service import FederationService
+
+    if case is None:
+        case = generate_case(seed, n_founding=harness.n_founding,
+                             capacity=harness.capacity,
+                             n_arrival_pool=harness.n_arrival_pool)
+    events = [op[1] for op in harness.materialize(case)
+              if op[0] == "push"]
+    total = case.total_rounds
+    spans = -(-total // span_rounds)
+    if plan is None:
+        plan = FaultPlan.generate(
+            seed, spans=spans, saves=max(2, spans), hang=hang,
+            flood_size=flood_size, hang_seconds=4 * span_timeout)
+        # corrupting ckpt_written#0 poisons the generation-0 *base*
+        # snapshot: a crash before the first periodic snapshot then has
+        # no restorable candidate — unrecoverable by design (bitrot on
+        # the only checkpoint), so retarget the bitrot to snapshot #1
+        faults = []
+        for f in plan.faults:
+            if f.site == "ckpt_written" and f.at == 0:
+                if any(g.site == "ckpt_written" and g.at == 1
+                       for g in plan.faults):
+                    continue
+                f = Fault(f.site, 1, f.kind, size=f.size,
+                          seconds=f.seconds)
+            faults.append(f)
+        plan = FaultPlan(faults=faults, seed=seed)
+
+    def service(sch, **kw):
+        return FederationService(
+            sch, span_rounds=span_rounds, max_rounds=total,
+            queue_policy="merge-stale", max_queue=256, **kw)
+
+    # fault-free reference: same service machinery, no injector
+    ref_sch = harness.new_scheduler("device", case_seed=seed)
+    svc = service(ref_sch)
+    svc.submit(*events)
+    with svc:
+        if not svc.wait_rounds(total, timeout=timeout):
+            raise InvariantViolation(
+                seed, "chaos-bitexact",
+                f"fault-free reference stalled before {total} rounds")
+    ref = {"history": ref_sch.history,
+           "params": jax.tree.map(np.asarray, ref_sch.params)}
+
+    # chaotic run: supervised auto-recovery under the fault plan
+    chaos_sch = harness.new_scheduler("device", case_seed=seed,
+                                      injector=plan)
+    with tempfile.TemporaryDirectory(prefix="fuzz-chaos-") as snapdir:
+        live = service(
+            chaos_sch, supervise=True, snapshot_dir=snapdir,
+            snapshot_every=snapshot_every, keep_snapshots=4,
+            backoff0=0.01, span_timeout=span_timeout,
+            join_timeout=10.0, injector=plan,
+            engine_factory=lambda: harness.engine,
+            restore_kwargs=dict(loss_fn=harness.loss_fn))
+        live.submit(*events)
+        with live:
+            if not live.wait_rounds(total, timeout=timeout):
+                raise InvariantViolation(
+                    seed, "chaos-bitexact",
+                    f"supervised run stalled before {total} rounds "
+                    f"(recoveries={len(live.recoveries)})")
+        final = live.scheduler
+        _check_exact_resume(
+            seed, ref,
+            {"history": final.history,
+             "params": jax.tree.map(np.asarray, final.params)},
+            invariant="chaos-bitexact")
+        _check_zero_recompile(seed, harness)
+        return {"seed": seed, "rounds": total,
+                "events": len(events),
+                "recoveries": len(live.recoveries),
+                "mttr_s": [r["mttr_s"] for r in live.recoveries],
+                "fired": [list(t) for t in plan.fired],
+                "events_merged": live.events_merged,
+                "snapshot_failures": live.snapshot_failures}
+
+
+def run_chaos_corpus(seeds, *, harness: Optional[FuzzHarness] = None,
+                     **kw) -> dict:
+    """Fuzzed-chaos verification over a seed corpus — shared by the
+    tier-1 test and benchmarks/fuzz_bench.py."""
+    if harness is None:
+        harness = FuzzHarness()
+    rows = [run_chaos_case(harness, int(s), **kw) for s in seeds]
+    mttrs = [m for r in rows for m in r["mttr_s"]]
+    return {"cases": len(rows),
+            "rounds": int(sum(r["rounds"] for r in rows)),
+            "recoveries": int(sum(r["recoveries"] for r in rows)),
+            "events": int(sum(r["events"] for r in rows)),
+            "events_merged": int(sum(r["events_merged"]
+                                     for r in rows)),
+            "mttr_mean_s": float(np.mean(mttrs)) if mttrs else 0.0,
+            "mttr_max_s": float(np.max(mttrs)) if mttrs else 0.0,
+            "per_case": rows}
 
 
 # -- corpus entry points -------------------------------------------------------

@@ -761,6 +761,10 @@ class FederationService:
             rkw = dict(self._restore_kwargs)
             if self.telemetry.enabled:
                 rkw.setdefault("telemetry", self.telemetry)
+            # a scheduler that was logging span args keeps logging after
+            # recovery (restore defaults log_spans off) — the fuzzer's
+            # weight/LR forward-fill reads the log across restarts
+            rkw.setdefault("log_spans", old_sch.span_log is not None)
             restored = None
             restored_epoch = None
             corrupt_skipped = []

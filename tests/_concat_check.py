@@ -24,13 +24,12 @@ import os
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=4")
 
-import json  # noqa: E402
-
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+import _subproc  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.models import transformer  # noqa: E402
 from repro.models.common import safe_concat  # noqa: E402
@@ -109,7 +108,7 @@ def main():
     check_arch("deepseek-v2-lite-16b", mesh)   # MLA q/k rope concats
     check_arch("mamba2-130m", mesh)            # SSD conv-cache concat
     RESULTS["n_devices"] = n_dev
-    print("RESULT " + json.dumps(RESULTS))
+    _subproc.emit(RESULTS)
 
 
 if __name__ == "__main__":

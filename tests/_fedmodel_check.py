@@ -19,11 +19,10 @@ import os
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=4")
 
-import json  # noqa: E402
-
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+import _subproc  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.configs.paper import SYNTHETIC_LR  # noqa: E402
 from repro.core.participation import TRACES  # noqa: E402
@@ -145,7 +144,7 @@ def main():
     check_lm_plan_parity()
     check_lm_zero_recompile_churn()
     RESULTS["n_devices"] = n_dev
-    print("RESULT " + json.dumps(RESULTS))
+    _subproc.emit(RESULTS)
 
 
 if __name__ == "__main__":

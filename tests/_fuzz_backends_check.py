@@ -1,0 +1,85 @@
+"""Subprocess body for the cross-backend fuzz parity axis
+(tests/test_fuzz_invariants.py) — the "sharded" backend only exists
+under a multi-device mesh, and XLA_FLAGS must virtualize devices before
+jax initializes, so this check runs in a fresh interpreter (the
+in-process tier-1 test covers client_parallel vs client_sequential).
+
+Checks:
+  1. the fuzzer's seeded op schedules walk ONE trajectory across all
+     three execution backends — client_parallel, client_sequential and
+     the 4-shard engine: exact control plane + s streams, final params
+     within tolerance, zero recompiles on every warm pool engine;
+  2. mutation smoke (acceptance criterion): a seeded parity break — the
+     sharded engine's slot-0 weight silently scaled 1.5x — must be
+     caught by the cross-check as a "backend-parity" violation.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+import _subproc  # noqa: E402
+from repro.fed import make_fed_sharding  # noqa: E402
+from repro.fed.fuzz import (InvariantViolation,  # noqa: E402
+                            make_backend_pool, run_backend_matrix,
+                            run_cross_backend_case)
+
+RESULTS = {}
+SEEDS = range(6)
+
+
+def check_matrix(pool):
+    stats = run_backend_matrix(SEEDS, pool=pool)
+    assert stats["cases"] == len(SEEDS)
+    assert stats["backends"] == ["client_parallel", "client_sequential",
+                                 "sharded"]
+    RESULTS["cases"] = stats["cases"]
+    RESULTS["rounds"] = stats["rounds"]
+    RESULTS["max_param_err"] = stats["max_param_err"]
+    RESULTS["events_applied"] = int(sum(
+        r["events_applied"] for r in stats["per_case"]))
+
+
+def check_parity_mutation_caught(pool):
+    # seeded breakage: scale the sharded engine's slot-0 aggregation
+    # weight — the kind of silent bias a wrong psum epilogue would
+    # introduce.  The cross-check must flag it, and must recover once
+    # the mutation is lifted.
+    eng = pool["sharded"].engine
+    orig = eng.run_span
+
+    def biased(params, tau_start, n_rounds, *, p, **kw):
+        p = np.asarray(p, np.float32).copy()
+        p[0] *= 1.5
+        return orig(params, tau_start, n_rounds, p=p, **kw)
+
+    eng.run_span = biased
+    try:
+        run_cross_backend_case(pool, 0)
+        raise SystemExit("biased sharded aggregation was NOT caught")
+    except InvariantViolation as e:
+        assert e.invariant == "backend-parity", e
+        RESULTS["parity_mutation_caught"] = True
+    finally:
+        del eng.run_span                   # restore the bound method
+    run_cross_backend_case(pool, 0)        # clean engine passes again
+    RESULTS["parity_mutation_clean_after"] = True
+
+
+def main():
+    n_dev = len(jax.devices())
+    assert n_dev == 4, f"expected 4 virtual devices, got {n_dev}"
+    pool = make_backend_pool(
+        ("client_parallel", "client_sequential", "sharded"),
+        sharding=make_fed_sharding(4))
+    check_matrix(pool)
+    check_parity_mutation_caught(pool)
+    RESULTS["n_devices"] = n_dev
+    _subproc.emit(RESULTS)
+
+
+if __name__ == "__main__":
+    main()

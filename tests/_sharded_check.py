@@ -15,17 +15,20 @@ Checks (the acceptance criteria of the sharded federation axis):
      arrival/departure churn, with capacity padded 6 -> 8 over 4 shards;
   3. device-mode sampling is sharding-invariant: identical s streams;
   4. zero scan recompiles across admit/evict/trace-shift churn under
-     sharding (compile-cache entry counts are flat).
+     sharding (compile-cache entry counts are flat);
+  5. null-vs-enabled telemetry on the *sharded* engine: bit-identical
+     history and params, identical trace counts (the single-device
+     pin lives in tests/test_telemetry.py).
 """
 import os
 
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=4")
 
-import json  # noqa: E402
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+import _subproc  # noqa: E402
 from repro.configs.paper import SYNTHETIC_LR  # noqa: E402
 from repro.core.participation import TRACES  # noqa: E402
 from repro.data import synthetic_federation  # noqa: E402
@@ -130,6 +133,43 @@ def check_zero_recompile_churn(fs):
     RESULTS["events_applied"] = sch.events_applied
 
 
+def check_null_telemetry(fs):
+    # PR 7 pinned null-vs-enabled telemetry bit-identity on the single-
+    # device engine only; the sharded engine threads telemetry through
+    # shard_map'd spans, so the contract needs its own pin here
+    from repro.obs.telemetry import Telemetry
+
+    def build(telemetry):
+        newcomer = make_clients(1, seed=99)[0]
+        sch = StreamScheduler(
+            clients=make_clients(), init_params=init_small(
+                jax.random.PRNGKey(0), CFG),
+            loss_fn=make_loss_fn(CFG), capacity=8, max_samples=60,
+            local_epochs=5, batch_size=10, scheme="C", eta0=0.5, seed=0,
+            mode="device", sharding=fs, chunk_size=4,
+            telemetry=telemetry,
+            events=[Arrival(3, client=newcomer),
+                    Departure(6, client_id=2, policy="exclude"),
+                    TraceShift(5, client_id=1, trace=TRACES[3])])
+        sch.run(10, eval_every=4)
+        return sch
+
+    a = build(None)
+    b = build(Telemetry())
+    assert a.engine.trace_count == b.engine.trace_count, \
+        (a.engine.trace_count, b.engine.trace_count)
+    assert len(a.history) == len(b.history)
+    for ra, rb in zip(a.history, b.history):
+        assert ra.tau == rb.tau and ra.event == rb.event
+        assert ra.n_active == rb.n_active and ra.eta == rb.eta
+        np.testing.assert_array_equal(np.asarray(ra.s), np.asarray(rb.s))
+    for la, lb in zip(jax.tree.leaves(a.params),
+                      jax.tree.leaves(b.params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    RESULTS["null_telemetry_bit_identical"] = True
+    RESULTS["null_telemetry_trace_count"] = int(a.engine.trace_count)
+
+
 def main():
     n_dev = len(jax.devices())
     assert n_dev == 4, f"expected 4 virtual devices, got {n_dev}"
@@ -139,8 +179,9 @@ def main():
     check_plan_parity(fs)
     check_device_sampling_invariance(fs)
     check_zero_recompile_churn(fs)
+    check_null_telemetry(fs)
     RESULTS["n_devices"] = n_dev
-    print("RESULT " + json.dumps(RESULTS))
+    _subproc.emit(RESULTS)
 
 
 if __name__ == "__main__":

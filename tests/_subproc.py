@@ -1,0 +1,52 @@
+"""Shared subprocess harness for multi-virtual-device checks.
+
+Multi-device sharding can only be exercised if XLA_FLAGS is set before
+jax initializes, and the tier-1 pytest process has long since imported
+jax — so those checks run in a fresh interpreter.  This module holds
+the re-exec boilerplate both sides share:
+
+  parent (a pytest fixture)     results = _subproc.run_check("_x_check.py")
+  child  (tests/_*_check.py)    _subproc.emit(RESULTS)   # last stdout line
+
+The child script must set XLA_FLAGS *before importing jax* (emit/
+run_check cannot do that for it), exit nonzero on any failure, and emit
+exactly one ``RESULT {json}`` line; run_check re-execs it with the
+repo's src/ on PYTHONPATH, asserts a clean exit, and returns the parsed
+payload.  Child scripts can ``import _subproc`` too — python puts the
+script's directory on sys.path.
+"""
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def run_check(script_name: str, *, devices: int = 4,
+              timeout: float = 900.0) -> dict:
+    """Run tests/<script_name> in a fresh interpreter under an
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<devices>`` CPU
+    mesh and return its parsed RESULT payload."""
+    script = os.path.join(HERE, script_name)
+    src = os.path.join(os.path.dirname(HERE), "src")
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count"
+                         f"={devices}",
+               PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH",
+                                                            ""))
+    proc = subprocess.run([sys.executable, script], env=env,
+                          capture_output=True, text=True,
+                          timeout=timeout)
+    assert proc.returncode == 0, (
+        f"{script_name} failed\nstdout:\n{proc.stdout}\n"
+        f"stderr:\n{proc.stderr}")
+    lines = [l for l in proc.stdout.splitlines()
+             if l.startswith("RESULT ")]
+    assert lines, proc.stdout
+    return json.loads(lines[-1][len("RESULT "):])
+
+
+def emit(results: dict) -> None:
+    """Child-side: print the one RESULT line run_check parses."""
+    print("RESULT " + json.dumps(results))

@@ -13,6 +13,15 @@ from __future__ import annotations
 import sys
 import types
 
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "fuzz: seeded-corpus fuzz/validation tests; corpus size scales "
+        "with REPRO_FUZZ_SEEDS (default 30; benchmarks/run.py --full "
+        "drives the 128-seed nightly tier)")
+
+
 try:  # pragma: no cover - exercised only when hypothesis is installed
     import hypothesis  # noqa: F401
 except ImportError:

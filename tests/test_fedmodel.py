@@ -14,15 +14,11 @@ Two layers of coverage (mirroring tests/test_sharded_engine.py):
   FSDP x TP sharded in client_sequential), and zero scan recompiles
   across an arrival burst.
 """
-import json
-import os
-import subprocess
-import sys
-
 import jax
 import numpy as np
 import pytest
 
+import _subproc
 from repro.configs import get_config
 from repro.fed import LMTask, RoundEngine
 from repro.launch.fed_train import build_fleet, main as fed_train_main
@@ -104,21 +100,7 @@ def test_fed_train_cli_smoke():
 @pytest.fixture(scope="module")
 def fedmodel_check():
     """Run tests/_fedmodel_check.py once under a 4-device CPU mesh."""
-    script = os.path.join(os.path.dirname(__file__), "_fedmodel_check.py")
-    src = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "src")
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=4",
-               PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH",
-                                                            ""))
-    proc = subprocess.run([sys.executable, script], env=env,
-                          capture_output=True, text=True, timeout=900)
-    assert proc.returncode == 0, (
-        f"fedmodel check failed\nstdout:\n{proc.stdout}\n"
-        f"stderr:\n{proc.stderr}")
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
-    assert line, proc.stdout
-    return json.loads(line[-1][len("RESULT "):])
+    return _subproc.run_check("_fedmodel_check.py")
 
 
 def test_composite_axes_multi_device(fedmodel_check):

@@ -5,16 +5,12 @@ single-device values on a real (virtual) 4-device mesh.
 In-process tests pin safe_concat's arithmetic; the mesh regression runs
 in a subprocess (tests/_concat_check.py) because XLA_FLAGS must virtualize
 devices before jax initializes."""
-import json
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import _subproc
 from repro.models.common import safe_concat
 
 
@@ -51,21 +47,7 @@ def test_mla_and_conv_decode_use_safe_concat():
 @pytest.fixture(scope="module")
 def concat_check():
     """Run tests/_concat_check.py once under a 4-device CPU mesh."""
-    script = os.path.join(os.path.dirname(__file__), "_concat_check.py")
-    src = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "src")
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=4",
-               PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH",
-                                                            ""))
-    proc = subprocess.run([sys.executable, script], env=env,
-                          capture_output=True, text=True, timeout=900)
-    assert proc.returncode == 0, (
-        f"concat check failed\nstdout:\n{proc.stdout}\n"
-        f"stderr:\n{proc.stderr}")
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
-    assert line, proc.stdout
-    return json.loads(line[-1][len("RESULT "):])
+    return _subproc.run_check("_concat_check.py")
 
 
 def test_safe_concat_bug_shape_multi_device(concat_check):

@@ -1,0 +1,159 @@
+"""Property tests for the participation-scheme algebra (paper §4.1-4.3):
+seeded sweeps over random weight vectors, epoch counts and membership
+churn, pinning the invariants every other layer leans on — coefficient
+mass conservation, scheme A's objective-only N counting, scheme C's
+exact debias identity, include-departed mass retention in
+FedState.data_weights, and the staircase-LR restart convention shared by
+core.arrivals and the in-jit engine formula.  Runs under real hypothesis
+when installed, else the deterministic shim in conftest.py."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.aggregation import scheme_coefficients, theta_bound
+from repro.core.arrivals import staircase_lr
+from repro.core.participation import TRACES
+from repro.fed import Arrival, Client, Departure, FedState
+from repro.fed.validate import QuadraticRunner
+
+
+def _random_p(rng, n, capacity):
+    """Normalized weights over n members, zero-padded to capacity slots
+    (the engine's buffer layout: empty columns carry p = 0)."""
+    w = rng.uniform(0.2, 2.0, size=n)
+    p = np.zeros(capacity)
+    p[:n] = w / w.sum()
+    return p
+
+
+@settings(max_examples=10)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 6),
+       pad=st.integers(0, 4), E=st.integers(1, 8))
+def test_coefficient_mass_and_bounds(seed, n, pad, E):
+    """Coefficients are finite, non-negative, zero on padding, and each
+    stays under the Assumption 3.5 ratio c_k <= theta p^k.  Per-round
+    coefficient mass sum_k p_tau^k s_tau^k is conserved (<= E sum_k p^k)
+    for schemes B and C; scheme A only bounds it by theta = N — its
+    per-round excess when heavy devices finish IS the bias Theorem 3.1
+    charges through M_tau."""
+    rng = np.random.default_rng(seed)
+    p = _random_p(rng, n, n + pad)
+    s = np.where(np.arange(n + pad) < n,
+                 rng.integers(0, E + 1, size=n + pad), 0)
+    for scheme in ("A", "B", "C"):
+        c = np.asarray(scheme_coefficients(scheme, p, s, E), np.float64)
+        assert np.all(np.isfinite(c)) and np.all(c >= 0)
+        assert np.all(c[p == 0] == 0)            # padding never weighted
+        theta = theta_bound(scheme, n, E)
+        assert np.all(c <= theta * p + 1e-6)
+        cap = E * p.sum() if scheme in ("B", "C") else E * theta * p.sum()
+        assert (c * s).sum() <= cap + 1e-5
+
+
+@settings(max_examples=10)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 6),
+       pad=st.integers(0, 4), E=st.integers(1, 8))
+def test_scheme_a_counts_objective_not_buffer(seed, n, pad, E):
+    """Scheme A's N is the number of objective members (p > 0), not the
+    slot-buffer length — zero-padded columns must not inflate the
+    reweighting.  Checked against a direct numpy transcription of Eq. (2)
+    restricted to the populated columns."""
+    rng = np.random.default_rng(seed)
+    p = _random_p(rng, n, n + pad)
+    s = np.where(np.arange(n + pad) < n,
+                 rng.integers(0, E + 1, size=n + pad), 0)
+    c = np.asarray(scheme_coefficients("A", p, s, E), np.float64)
+    complete = (s >= E) & (p > 0)
+    K = complete.sum()
+    want = np.zeros_like(p)
+    if K > 0:
+        want[complete] = n * p[complete] / K
+    np.testing.assert_allclose(c, want, atol=1e-6)
+
+
+@settings(max_examples=10)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 6),
+       E=st.integers(1, 8))
+def test_scheme_c_debias_identity(seed, n, E):
+    """The paper's contribution in one line: p_tau^k s_tau^k == E p^k
+    whenever the device did any work — every participating member
+    contributes its full unbiased mass regardless of how little it
+    completed."""
+    rng = np.random.default_rng(seed)
+    p = _random_p(rng, n, n)
+    s = rng.integers(0, E + 1, size=n)
+    c = np.asarray(scheme_coefficients("C", p, s, E), np.float64)
+    np.testing.assert_allclose(c * s, np.where(s > 0, E * p, 0.0),
+                               atol=1e-6)
+
+
+@settings(max_examples=10)
+@given(seed=st.integers(0, 10_000), depart=st.integers(1, 3))
+def test_include_departed_mass_retention(seed, depart):
+    """§4.3 'include': a departed device keeps its mass in the
+    normalization (the objective does not shift) but holds no slot, so
+    data_weights sums to 1 - p_l while every remaining member keeps its
+    original weight exactly; a later rejoin restores the full unit mass
+    without an LR restart."""
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(1, 20, size=4)
+    clients = [Client(x=np.zeros((int(m), 2), np.float32),
+                      y=np.zeros(int(m), np.int32), trace=TRACES[0])
+               for m in counts]
+    state = FedState(clients=clients, capacity=5)
+    assert state.data_weights().sum() == pytest.approx(1.0)
+    state.apply(Departure(3, client_id=depart, policy="include"), 3)
+    total = counts.sum()
+    p = state.data_weights()
+    assert p.sum() == pytest.approx(1.0 - counts[depart] / total)
+    for i in range(4):
+        if i != depart:
+            assert p[state.slot_of[i]] == pytest.approx(
+                counts[i] / total)
+    shift_before = state.lr_shift_tau
+    state.apply(Arrival(7, client_id=depart), 7)
+    assert state.data_weights().sum() == pytest.approx(1.0)
+    assert state.lr_shift_tau == shift_before    # rejoin: no LR restart
+
+
+@settings(max_examples=10)
+@given(eta0=st.floats(0.01, 10.0), tau=st.integers(0, 200),
+       tau0=st.integers(0, 200))
+def test_staircase_lr_restart_and_decay(eta0, tau, tau0):
+    """Cor. 3.2.1 shape: the restarted staircase returns exactly eta0 on
+    the first round after the shift and decays monotonically after."""
+    assert staircase_lr(eta0, tau0 + 1, tau0) == pytest.approx(eta0)
+    a = staircase_lr(eta0, tau + 1, tau0)
+    b = staircase_lr(eta0, tau + 2, tau0)
+    assert 0 < b <= a <= eta0 + 1e-12
+
+
+def test_staircase_lr_identity_through_engine():
+    """The in-jit engine LR and core.arrivals.staircase_lr share one
+    off-by-one convention: a real run's history must satisfy
+    eta(tau) == staircase_lr(eta0, tau + 1, lr_shift_tau), including
+    across a mid-run objective shift that restarts the staircase."""
+    from repro.fed.stream import StreamScheduler
+    runner = QuadraticRunner()
+    eng = runner._engine("C")
+    for slot in range(eng.capacity):
+        eng.evict(slot)
+    clients = runner._clients()
+    eng.admit_many(list(enumerate(clients)))
+    sch = StreamScheduler(
+        clients=clients, init_params=runner.init_params, engine=eng,
+        mode="device", seed=0, log_spans=True,
+        events=[Departure(5, client_id=2, policy="exclude")])
+    sch.run(10, eval_every=1 << 30)
+    log = sorted(sch.span_log, key=lambda t: t[0])
+    shifts = set()
+    j = 0
+    for rec in sch.history:
+        while j + 1 < len(log) and log[j + 1][0] <= rec.tau:
+            j += 1
+        lr_shift = log[j][3]
+        shifts.add(lr_shift)
+        assert rec.eta == pytest.approx(
+            staircase_lr(runner.eta0, rec.tau + 1, lr_shift), rel=1e-5)
+    assert shifts == {0, 5}                      # the departure restarted

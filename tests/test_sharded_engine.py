@@ -13,15 +13,12 @@ Two layers of coverage:
   invariance, the cross-device psum reduction for both weighted_agg
   layouts, and zero scan recompiles across membership churn.
 """
-import json
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+import _subproc
 
 from repro.configs.paper import SYNTHETIC_LR
 from repro.core.participation import TRACES
@@ -125,21 +122,7 @@ def test_one_device_mesh_matches_unsharded(agg):
 @pytest.fixture(scope="module")
 def sharded_check():
     """Run tests/_sharded_check.py once under a 4-device CPU mesh."""
-    script = os.path.join(os.path.dirname(__file__), "_sharded_check.py")
-    src = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "src")
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=4",
-               PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH",
-                                                            ""))
-    proc = subprocess.run([sys.executable, script], env=env,
-                          capture_output=True, text=True, timeout=900)
-    assert proc.returncode == 0, (
-        f"sharded check failed\nstdout:\n{proc.stdout}\n"
-        f"stderr:\n{proc.stderr}")
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
-    assert line, proc.stdout
-    return json.loads(line[-1][len("RESULT "):])
+    return _subproc.run_check("_sharded_check.py")
 
 
 def test_sharded_engine_round_for_round_parity(sharded_check):
@@ -158,3 +141,10 @@ def test_sharded_psum_aggregation_both_layouts(sharded_check):
 def test_sharded_churn_zero_recompiles(sharded_check):
     assert sharded_check["recompiles_across_churn"] == 0
     assert sharded_check["events_applied"] >= 5
+
+
+def test_sharded_null_telemetry_bit_identity(sharded_check):
+    # the single-device pin lives in tests/test_telemetry.py; this one
+    # covers the shard_map'd span path
+    assert sharded_check["null_telemetry_bit_identical"] is True
+    assert sharded_check["null_telemetry_trace_count"] > 0

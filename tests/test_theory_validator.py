@@ -1,0 +1,99 @@
+"""Theory-scored validation (fed/validate.py): fuzzed participation
+schedules executed through the real engine on closed-form quadratic
+federations, every run scored against the Theorem 3.1 envelope computed
+from the *observed* participation matrix, plus the paper's Table-1
+scheme ordering.  And the meta-tests: seed the two breakage classes the
+validator exists to catch — a mis-weighted scheme C (collapsed onto B's
+biased coefficients) must trip the ordering check, and a mis-signed
+aggregation must trip the bound check."""
+import numpy as np
+import pytest
+
+import repro.fed.engine as engine_mod
+from repro.core.aggregation import scheme_coefficients
+from repro.fed import InvariantViolation
+from repro.fed.validate import (QuadraticRunner, TheoryValidator,
+                                generate_participation_schedule,
+                                make_quadratic_problem, validate_corpus)
+
+pytestmark = pytest.mark.fuzz
+
+
+@pytest.fixture(scope="module")
+def runner():
+    """One pooled per-scheme engine set for the whole module (the scheme
+    is baked at trace time, so each scheme owns its jit cache)."""
+    return QuadraticRunner()
+
+
+def test_validator_corpus_bound_and_ordering(runner):
+    agg = validate_corpus(range(2), runner=runner)
+    assert agg["cases"] == 2
+    # the envelope is loose by construction; a clean run sits far below
+    assert agg["max_margin"] < 0.05
+    for row in agg["per_case"]:
+        assert row["n_events"] >= 2            # schedules actually churn
+        # Table-1 ordering with real headroom, not a squeaker
+        assert row["tails"]["C"] < 0.6 * row["tails"]["A"]
+        assert row["tails"]["C"] < 0.6 * row["tails"]["B"]
+
+
+def test_quadratic_constants_are_closed_form():
+    pr = make_quadratic_problem(seed=3)
+    # w* solves sum_k p_k A_k (w - c_k) = 0 for diagonal A_k
+    num = (pr.p[:, None] * pr.a_diag * pr.c).sum(0)
+    den = (pr.p[:, None] * pr.a_diag).sum(0)
+    np.testing.assert_allclose(pr.w_star, num / den, rtol=1e-10)
+    assert pr.pc.mu > 0 and pr.pc.L >= pr.pc.mu
+    assert pr.G2 > 0 and np.all(np.asarray(pr.pc.sigma2) == 0)
+
+
+def test_schedule_generator_reproducible():
+    a = generate_participation_schedule(5, n_clients=4, rounds=64)
+    b = generate_participation_schedule(5, n_clients=4, rounds=64)
+    assert repr(a) == repr(b)
+    assert 2 <= len(a) <= 6
+    assert repr(a) != repr(
+        generate_participation_schedule(6, n_clients=4, rounds=64))
+
+
+def test_observed_stats_feed_the_bound(runner):
+    """score() consumes the run's own (p, s) matrix: E_ps sums to a
+    positive effective rate and the bound trajectory is finite and
+    decreasing in tau (the 1/(tau E + gamma) envelope)."""
+    dump = runner.run("C", rounds=16, seed=0)
+    sc = TheoryValidator(runner.problem).score(dump)
+    assert sc["S"] > 0
+    assert np.all(np.isfinite(sc["bounds"]))
+    assert sc["bounds"][-1] < sc["bounds"][0]
+    assert 0.0 <= sc["biased_frac"] <= 1.0
+
+
+# -- mutation smoke: a validator that can't fail validates nothing -------------
+
+def test_mutation_collapsed_scheme_c_is_caught(monkeypatch):
+    """Drop scheme C's E/s debiasing (serve B's coefficients instead):
+    C lands on B's bias plateau and the Table-1 ordering check fires.
+    The engine bakes the coefficient fn at trace time, so the mutation
+    patches the engine module's global before any engine is built."""
+    def collapsed(scheme, p, s, E):
+        return scheme_coefficients("B" if scheme == "C" else scheme,
+                                   p, s, E)
+    monkeypatch.setattr(engine_mod, "scheme_coefficients", collapsed)
+    with pytest.raises(InvariantViolation) as ei:
+        validate_corpus(range(1), runner=QuadraticRunner())
+    assert ei.value.invariant == "scheme-ordering"
+
+
+def test_mutation_sign_flipped_weights_are_caught(monkeypatch):
+    """Mis-signed aggregation drives the iterate *away* from w*; the
+    gap crosses the (loose) Theorem 3.1 envelope within a few rounds
+    and the bound check fires — the divergence-tripwire role."""
+    monkeypatch.setattr(
+        engine_mod, "scheme_coefficients",
+        lambda scheme, p, s, E: -scheme_coefficients(scheme, p, s, E))
+    runner = QuadraticRunner()
+    dump = runner.run("C", rounds=64, seed=0)
+    with pytest.raises(InvariantViolation) as ei:
+        TheoryValidator(runner.problem).check_bound(dump)
+    assert ei.value.invariant == "theory-bound"
