@@ -52,7 +52,7 @@ def _null_eval(params, x, y):
 
 
 def _make_trainer(engine, *, loss_fn, n_clients, seed=0, chunk=32,
-                  agg="auto"):
+                  agg="auto", compression=None):
     train, test = synthetic_federation(0.5, 0.5, n_clients, seed=seed)
     rng = np.random.default_rng(seed)
     clients = [Client(x=tr[0], y=tr[1], trace=TRACES[rng.integers(0, 5)],
@@ -62,7 +62,8 @@ def _make_trainer(engine, *, loss_fn, n_clients, seed=0, chunk=32,
         loss_fn=loss_fn, eval_fn=_null_eval,
         init_params=init_small(jax.random.PRNGKey(0), CFG),
         clients=clients, local_epochs=5, batch_size=20, scheme="C",
-        eta0=1.0, seed=seed, engine=engine, chunk_size=chunk, agg=agg)
+        eta0=1.0, seed=seed, engine=engine, chunk_size=chunk, agg=agg,
+        compression=compression)
 
 
 def _rounds_per_sec(tr, span, reps):
@@ -151,6 +152,60 @@ def run(span=32, reps=7, n_clients=12, chunk=32):
         "weighted_agg_single_launch_us": round(agg_us, 1),
     }
     return out
+
+
+def compression_run(span=32, reps=7, n_clients=12, chunk=32):
+    """Compressed-delta aggregation series: wire bytes moved per round for
+    each payload format (analytic, from the format's exact layout) and
+    quantized-vs-f32 rounds/sec through the same device engine."""
+    from repro.core.compression import resolve_compression, wire_bytes
+
+    cur_loss = make_loss_fn(CFG)
+    params = init_small(jax.random.PRNGKey(0), CFG)
+    D = sum(p.size for p in jax.tree.leaves(params))
+
+    kinds = ["none", "bf16", "int8", "int8-topk"]
+    bytes_per_round = {
+        k: wire_bytes(D, resolve_compression(k), n_clients=n_clients)
+        for k in kinds}
+
+    rps = {}
+    for label, comp in [("f32", None), ("bf16", "bf16"), ("int8", "int8")]:
+        rps[label] = _rounds_per_sec(
+            _make_trainer("device", loss_fn=cur_loss, n_clients=n_clients,
+                          chunk=chunk, compression=comp), span, reps)
+
+    out = {
+        "config": {"dataset": "synthetic", "model": "logreg",
+                   "n_clients": n_clients, "span": span, "reps": reps,
+                   "chunk_size": chunk, "d_total": D,
+                   "quant_chunk": resolve_compression("int8").chunk,
+                   "backend": jax.default_backend()},
+        "bytes_per_round": bytes_per_round,
+        "bytes_reduction_vs_f32": {
+            k: round(bytes_per_round["none"] / bytes_per_round[k], 2)
+            for k in kinds if k != "none"},
+        "rounds_per_sec": {k: round(v, 2) for k, v in rps.items()},
+        "slowdown_int8_vs_f32": round(
+            max(0.0, 1.0 - rps["int8"] / rps["f32"]), 4),
+    }
+    return out
+
+
+def compression_main(path="BENCH_engine.json", **kw):
+    """Merge the compression series into BENCH_engine.json under the
+    "compression" key (same merge pattern as sharded_bench)."""
+    import os
+    res = compression_run(**kw)
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data["compression"] = res
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+    return res
 
 
 def main(path="BENCH_engine.json", **kw):

@@ -35,6 +35,25 @@ def bench_weighted_agg(K=16, D=1_000_000):
             ("weighted_agg_pallas_interp", us_kern, "interpret=True")]
 
 
+def bench_weighted_agg_quant(K=16, D=1_048_576, chunk=256):
+    # D must be a chunk multiple: the kernel consumes already-padded
+    # payloads (quantize_chunked pads), so the bench feeds aligned ones
+    key = jax.random.PRNGKey(0)
+    c = jax.random.uniform(key, (K,))
+    payload = jax.random.randint(key, (K, D), -127, 128, jnp.int8)
+    scales = jax.random.uniform(key, (K, D // chunk), jnp.float32,
+                                1e-4, 1e-2)
+    ref_jit = jax.jit(lambda c, p, s: ref.weighted_agg_quant_ref(
+        c, p, s, chunk=chunk))
+    us_ref = _time(ref_jit, c, payload, scales)
+    us_kern = _time(lambda c, p, s: ops.weighted_agg_quant(
+        c, p, s, chunk=chunk), c, payload, scales)
+    return [("weighted_agg_quant_ref_jnp", us_ref,
+             f"K={K},D={D},chunk={chunk}"),
+            ("weighted_agg_quant_pallas_interp", us_kern,
+             "interpret=True")]
+
+
 def bench_masked_sgd(D=1_000_000):
     key = jax.random.PRNGKey(0)
     w = jax.random.normal(key, (D,))
@@ -76,6 +95,7 @@ def bench_ssd_chunk(G=48, Q=128, N=64, P=64):
 def run_all():
     rows = []
     rows += bench_weighted_agg()
+    rows += bench_weighted_agg_quant()
     rows += bench_masked_sgd()
     rows += bench_flash()
     rows += bench_ssd_chunk()

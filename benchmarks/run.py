@@ -46,6 +46,8 @@ def main() -> None:
                     help="skip the telemetry-overhead benchmark")
     ap.add_argument("--skip-sharded", action="store_true",
                     help="skip the sharded-vs-single engine benchmark")
+    ap.add_argument("--skip-compression", action="store_true",
+                    help="skip the compressed-delta aggregation benchmark")
     ap.add_argument("--skip-fedmodel", action="store_true",
                     help="skip the transformer-federation benchmark")
     ap.add_argument("--check-docs", action="store_true",
@@ -93,6 +95,20 @@ def main() -> None:
         print(f"weighted_agg_single_launch_us,"
               f"{res['weighted_agg_single_launch_us']}")
         print(f"# wrote {args.bench_json}")
+        sys.stdout.flush()
+
+    if not args.skip_compression:
+        from benchmarks.engine_bench import compression_main
+        res = compression_main(args.bench_json)
+        print("\n# compression: kind,bytes_per_round,reduction_vs_f32")
+        for kind, nbytes in res["bytes_per_round"].items():
+            red = res["bytes_reduction_vs_f32"].get(kind, 1.0)
+            print(f"{kind},{nbytes},{red}")
+        print("# compression: wire,rounds_per_sec")
+        for wire, rps in res["rounds_per_sec"].items():
+            print(f"{wire},{rps}")
+        print(f"slowdown_int8_vs_f32,{res['slowdown_int8_vs_f32']}")
+        print(f"# merged into {args.bench_json}")
         sys.stdout.flush()
 
     if not args.skip_sharded:

@@ -110,17 +110,19 @@ def _rounds_per_sec(sch, span, reps, *, churn: bool):
     return span / best
 
 
-def run(span=24, reps=5, seed=0, mode="device", chunk=16):
+def run(span=24, reps=5, seed=0, mode="device", chunk=16,
+        compression=None):
     sc = make_scenario("flash-crowd", seed=seed)
 
     # event-free baseline: same fleet/capacity, no events ever
     static = build_scheduler(
         make_scenario("flash-crowd", seed=seed), mode=mode,
-        chunk_size=chunk)
+        chunk_size=chunk, compression=compression)
     static._queue.clear()
     rps_static = _rounds_per_sec(static, span, reps, churn=False)
 
-    churned = build_scheduler(sc, mode=mode, chunk_size=chunk)
+    churned = build_scheduler(sc, mode=mode, chunk_size=chunk,
+                              compression=compression)
     rps_churn = _rounds_per_sec(churned, span, reps, churn=True)
 
     admit_us, evict_us = _admit_evict_us(
@@ -134,7 +136,8 @@ def run(span=24, reps=5, seed=0, mode="device", chunk=16):
     sch, summary = None, None
     t0 = time.perf_counter()
     sch = build_scheduler(make_scenario("flash-crowd", seed=seed),
-                          mode=mode, chunk_size=chunk)
+                          mode=mode, chunk_size=chunk,
+                          compression=compression)
     sch.run(sc.n_rounds, eval_every=sc.eval_every)
     scenario_wall = time.perf_counter() - t0
     summary = summarize_history(sch.history)
@@ -144,6 +147,7 @@ def run(span=24, reps=5, seed=0, mode="device", chunk=16):
         "config": {"scenario": "flash-crowd", "mode": mode, "span": span,
                    "reps": reps, "chunk_size": chunk,
                    "capacity": churned.engine.capacity,
+                   "compression": churned.engine.compression.name,
                    "backend": jax.default_backend()},
         "rounds_per_sec": {"static": round(rps_static, 2),
                            "churn": round(rps_churn, 2)},

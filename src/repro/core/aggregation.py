@@ -70,7 +70,7 @@ def flatten_client_deltas(deltas):
 
 
 def aggregate_deltas_flat(params, deltas, coeffs, *, block: int = 2048,
-                          interpret=None, sharding=None):
+                          interpret=None, sharding=None, compression=None):
     """Same contract as aggregate_deltas, but the whole model is flattened
     into a single (C, D_total) buffer and reduced with ONE weighted_agg
     Pallas launch (instead of one scaled-add tree per leaf).
@@ -78,21 +78,66 @@ def aggregate_deltas_flat(params, deltas, coeffs, *, block: int = 2048,
     sharding: an optional fed.sharding.FedSharding whose mesh shards the
     client axis — each device then reduces its own (C/n, D_total) slab
     locally and a psum epilogue replicates the result (the cross-device
-    path of the sharded round engine)."""
+    path of the sharded round engine).
+
+    compression: optional CompressionSpec/str (core.compression).  The
+    int8 kinds quantize the flat buffer on-device and reduce it with the
+    fused dequant-and-reduce kernel — under sharding the payload+scales
+    are what shard over the federation axes, so only compressed bytes
+    (plus one f32 psum) cross the client dim.  bf16 is a plain cast into
+    the existing kernel (it reduces any float dtype in f32)."""
+    from repro.core.compression import compress_flat, resolve_compression
     from repro.kernels import ops  # kernels never import core: no cycle
 
+    spec = resolve_compression(compression)
     flat = flatten_client_deltas(deltas)
     # shrink the tile for models smaller than one default block (pad waste)
     D = flat.shape[1]
     block = min(block, max(128, -(-D // 128) * 128))
-    if sharding is not None:
-        flat = sharding.constrain_client(flat)
-        agg = ops.weighted_agg_sharded(
-            coeffs.astype(jnp.float32), flat, mesh=sharding.mesh,
-            axis=sharding.axis, block=block, interpret=interpret)
+    if spec.quantized:
+        payload, scales = compress_flat(flat, spec)
+        if sharding is not None:
+            payload, scales = sharding.constrain_compressed(payload, scales)
+            agg = ops.weighted_agg_quant_sharded(
+                coeffs.astype(jnp.float32), payload, scales,
+                chunk=spec.chunk, mesh=sharding.mesh, axis=sharding.axis,
+                block=block, interpret=interpret)
+        else:
+            agg = ops.weighted_agg_quant(
+                coeffs.astype(jnp.float32), payload, scales,
+                chunk=spec.chunk, block=block, interpret=interpret)
+        agg = agg[:D]
     else:
-        agg = ops.weighted_agg(coeffs.astype(jnp.float32), flat,
-                               block=block, interpret=interpret)
+        if spec.kind == "bf16":
+            flat = flat.astype(jnp.bfloat16)
+        if sharding is not None:
+            flat = sharding.constrain_client(flat)
+            agg = ops.weighted_agg_sharded(
+                coeffs.astype(jnp.float32), flat, mesh=sharding.mesh,
+                axis=sharding.axis, block=block, interpret=interpret)
+        else:
+            agg = ops.weighted_agg(coeffs.astype(jnp.float32), flat,
+                                   block=block, interpret=interpret)
+    p_leaves, treedef = jax.tree.flatten(params)
+    outs, off = [], 0
+    for p in p_leaves:
+        seg = agg[off:off + p.size].reshape(p.shape)
+        outs.append((p.astype(jnp.float32) + seg).astype(p.dtype))
+        off += p.size
+    return jax.tree.unflatten(treedef, outs)
+
+
+def aggregate_deltas_compressed_ref(params, deltas, coeffs, compression):
+    """Pure-jnp reference for the compressed flat reduction: quantize ->
+    dequantize -> einsum on the same flat layout and chunk grid as the
+    fused kernel.  This is the off-TPU path (interpret-mode Pallas is an
+    emulator, far slower than XLA's einsum on CPU) — same lattice, only
+    the f32 reduction order differs."""
+    from repro.core.compression import resolve_compression, round_trip
+
+    spec = resolve_compression(compression)
+    flat = round_trip(flatten_client_deltas(deltas), spec)
+    agg = jnp.einsum("k,kd->d", coeffs.astype(jnp.float32), flat)
     p_leaves, treedef = jax.tree.flatten(params)
     outs, off = [], 0
     for p in p_leaves:

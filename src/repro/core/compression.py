@@ -1,0 +1,240 @@
+"""Client-delta compression: the wire format behind ``compression=``.
+
+On a real mesh the federated bottleneck is bytes, not FLOPs: every round
+ships one f32 delta per sampled client into the aggregator, and the
+paper's schemes (Eq. 2) only reweight that traffic.  This module defines
+what actually goes on the wire:
+
+  none       f32 deltas, the uncompressed baseline (4 bytes/elem).
+  bf16       plain bfloat16 cast (2 bytes/elem, no scales) — the existing
+             weighted_agg kernel already reduces any float dtype in f32.
+  int8       per-chunk symmetric quantization: the flat delta row is cut
+             into ``chunk``-wide groups, each stored as int8 codes in
+             [-levels, +levels] plus ONE f32 scale = absmax/levels
+             (~1 byte/elem + 4/chunk, a 3.94x byte cut at chunk=256).
+  int8-topk  magnitude top-k sparsification (per client row) before the
+             int8 path: only ``topk_frac`` of entries survive, the rest
+             quantize to 0; wire bytes count value+index pairs.
+
+Quantization happens on the *flattened* ``(C, D_total)`` layout
+(`core.aggregation.flatten_client_deltas` order), so the parallel vmap
+path and the sequential per-client accumulator see identical chunk
+boundaries — the two execution modes stay parity-comparable.  The fused
+dequant-and-reduce Pallas kernel (`kernels/weighted_agg.py`) consumes
+the (payload, scales) pair directly; `round_trip` is the pure-jnp
+reference used off-TPU and by the sequential accumulator.
+
+Error contract (pinned by the property tests): for every element of a
+chunk with stored scale s, |x - dequant(quant(x))| <= s/2.  Zero chunks
+store scale 0 and round-trip exactly; chunks whose absmax/levels would
+underflow f32 get a floor scale of 2^-126 so the bound survives
+subnormal inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Smallest normal f32: the scale floor that keeps round(x/scale) finite
+# and the <= scale/2 error bound valid for subnormal chunk maxima.
+_SCALE_FLOOR = 2.0 ** -126
+
+KINDS = ("none", "bf16", "int8", "int8-topk")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """Static description of the delta wire format (hashable: it is
+    closed over by jitted round steps and keys benchmark sections)."""
+    kind: str = "none"
+    chunk: int = 256          # scale-group width along the flat D axis
+    levels: int = 127         # int8 code range is [-levels, +levels]
+    topk_frac: float = 0.1    # surviving fraction per row (int8-topk)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"compression kind must be one of {KINDS}, "
+                             f"got {self.kind!r}")
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        if not 1 <= self.levels <= 127:
+            raise ValueError(f"levels must be in [1, 127] (int8 codes), "
+                             f"got {self.levels}")
+        if not 0.0 < self.topk_frac <= 1.0:
+            raise ValueError(f"topk_frac must be in (0, 1], "
+                             f"got {self.topk_frac}")
+
+    @property
+    def quantized(self) -> bool:
+        """True for the int8 code paths (payload + scales)."""
+        return self.kind in ("int8", "int8-topk")
+
+    @property
+    def active(self) -> bool:
+        return self.kind != "none"
+
+    @property
+    def name(self) -> str:
+        """Canonical string form; `resolve_compression` round-trips it."""
+        if self.kind == "none":
+            return "none"
+        opts = []
+        if self.quantized:
+            if self.chunk != 256:
+                opts.append(f"chunk={self.chunk}")
+            if self.levels != 127:
+                opts.append(f"levels={self.levels}")
+            if self.kind == "int8-topk" and self.topk_frac != 0.1:
+                opts.append(f"topk={self.topk_frac:g}")
+        return self.kind + (":" + ",".join(opts) if opts else "")
+
+
+def resolve_compression(spec) -> CompressionSpec:
+    """None | str | CompressionSpec -> CompressionSpec.
+
+    Strings are ``kind`` or ``kind:opt=v,opt=v`` with opts ``chunk``,
+    ``levels``, ``topk`` — e.g. ``"int8"``, ``"int8:chunk=128,levels=7"``,
+    ``"int8-topk:topk=0.05"``.
+    """
+    if spec is None:
+        return CompressionSpec("none")
+    if isinstance(spec, CompressionSpec):
+        return spec
+    if not isinstance(spec, str):
+        raise TypeError(f"compression must be None, str or CompressionSpec, "
+                        f"got {type(spec).__name__}")
+    kind, _, rest = spec.partition(":")
+    kw = {}
+    if rest:
+        for item in rest.split(","):
+            key, _, val = item.partition("=")
+            key = key.strip()
+            if key == "chunk":
+                kw["chunk"] = int(val)
+            elif key == "levels":
+                kw["levels"] = int(val)
+            elif key == "topk":
+                kw["topk_frac"] = float(val)
+            else:
+                raise ValueError(f"unknown compression option {key!r} "
+                                 f"in {spec!r}")
+    return CompressionSpec(kind.strip(), **kw)
+
+
+def quantize_chunked(flat, *, chunk: int, levels: int = 127):
+    """(K, D) float -> (payload int8 (K, Dp), scales f32 (K, Dp/chunk))
+    with Dp = D rounded up to a chunk multiple (zero-padded; zero codes
+    contribute nothing downstream).
+
+    Per (row, chunk) group: scale = absmax/levels (floored at 2^-126 so
+    subnormal groups keep a representable scale; exactly-zero groups get
+    scale 0 and all-zero codes), payload = round(x/scale) clipped to the
+    symmetric code range.
+    """
+    flat = flat.astype(jnp.float32)
+    K, D = flat.shape
+    pad = (-D) % chunk
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    Dp = D + pad
+    g = flat.reshape(K, Dp // chunk, chunk)
+    absmax = jnp.max(jnp.abs(g), axis=-1)
+    scales = jnp.where(absmax > 0,
+                       jnp.maximum(absmax / levels, _SCALE_FLOOR), 0.0)
+    safe = jnp.where(scales > 0, scales, 1.0)
+    codes = jnp.clip(jnp.round(g / safe[..., None]), -levels, levels)
+    return (codes.astype(jnp.int8).reshape(K, Dp),
+            scales.astype(jnp.float32))
+
+
+def dequantize_chunked(payload, scales, *, chunk: int, d: int | None = None):
+    """(K, Dp) int8 + (K, Dp/chunk) f32 -> (K, d or Dp) f32."""
+    K, Dp = payload.shape
+    g = (payload.astype(jnp.float32).reshape(K, Dp // chunk, chunk)
+         * scales[..., None])
+    out = g.reshape(K, Dp)
+    return out if d is None else out[:, :d]
+
+
+def topk_mask(flat, frac: float):
+    """Per-row magnitude top-k keep mask for (K, D) deltas.  k is static
+    (max(1, round(frac*D))); ties at the threshold all survive."""
+    D = flat.shape[1]
+    k = max(1, min(D, int(round(frac * D))))
+    mag = jnp.abs(flat.astype(jnp.float32))
+    thresh = jax.lax.top_k(mag, k)[0][:, -1]
+    return mag >= thresh[:, None]
+
+
+def compress_flat(flat, spec: CompressionSpec):
+    """Quantize a flat (K, D) delta buffer per the spec.
+
+    Returns (payload int8 (K, Dp), scales f32 (K, Dp/chunk)) — the pair
+    the fused dequant-and-reduce kernel consumes.  Only valid for the
+    int8 kinds; bf16 has no payload/scale split (it is a plain cast).
+    """
+    if not spec.quantized:
+        raise ValueError(f"compress_flat needs an int8 kind, "
+                         f"got {spec.kind!r}")
+    if spec.kind == "int8-topk":
+        flat = jnp.where(topk_mask(flat, spec.topk_frac),
+                         flat.astype(jnp.float32), 0.0)
+    return quantize_chunked(flat, chunk=spec.chunk, levels=spec.levels)
+
+
+def round_trip(flat, spec: CompressionSpec):
+    """Quantize-then-dequantize a (K, D) buffer: the pure-jnp reference
+    for what the fused kernel dequantizes in VMEM.  Identity for
+    kind='none'."""
+    if not spec.active:
+        return flat.astype(jnp.float32)
+    if spec.kind == "bf16":
+        return flat.astype(jnp.bfloat16).astype(jnp.float32)
+    D = flat.shape[1]
+    payload, scales = compress_flat(flat, spec)
+    return dequantize_chunked(payload, scales, chunk=spec.chunk, d=D)
+
+
+def round_trip_tree(delta, spec: CompressionSpec):
+    """Round-trip one client's delta pytree through the wire format.
+
+    Leaves are flattened to a (1, D_total) row in jax.tree.leaves order —
+    the SAME order and chunk grid as the stacked parallel path — so the
+    sequential accumulator quantizes identically to the vmap layout.
+    """
+    if not spec.active:
+        return delta
+    leaves, treedef = jax.tree.flatten(delta)
+    flat = jnp.concatenate(
+        [l.reshape(1, -1).astype(jnp.float32) for l in leaves], axis=1)
+    rt = round_trip(flat, spec)[0]
+    outs, off = [], 0
+    for l in leaves:
+        outs.append(rt[off:off + l.size].reshape(l.shape))
+        off += l.size
+    return jax.tree.unflatten(treedef, outs)
+
+
+def wire_bytes(D: int, spec, *, n_clients: int = 1) -> int:
+    """Analytic bytes-on-the-wire for one round of client->aggregator
+    delta traffic (the quantity `BENCH_engine.json["compression"]`
+    reports).  f32 baseline: 4*D per client.  int8: 1 byte/code for the
+    D live elements + one f32 scale per chunk — the zero-padding the
+    kernel layout appends to reach a chunk multiple is reconstructed on
+    receipt, so it never crosses the wire.  int8-topk: surviving
+    (int8 value, int32 index) pairs + the scale slab."""
+    spec = resolve_compression(spec)
+    if spec.kind == "none":
+        per = 4 * D
+    elif spec.kind == "bf16":
+        per = 2 * D
+    else:
+        n_chunks = -(-D // spec.chunk)
+        if spec.kind == "int8":
+            per = D + 4 * n_chunks
+        else:
+            kept = max(1, min(D, int(round(spec.topk_frac * D))))
+            per = kept * (1 + 4) + 4 * n_chunks
+    return per * n_clients

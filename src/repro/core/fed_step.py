@@ -22,8 +22,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import (accumulate_delta, aggregate_deltas,
+                                    aggregate_deltas_compressed_ref,
                                     aggregate_deltas_flat, apply_accumulator,
                                     scheme_coefficients)
+from repro.core.compression import resolve_compression, round_trip_tree
 
 
 def local_sgd(loss_fn: Callable, params, client_batches, alpha_e, eta):
@@ -107,7 +109,7 @@ def _log_batch_padding(b: int, n_shards: int, pad: int) -> None:
 def fed_round_parallel(loss_fn, params, batches, alpha, coeffs, eta, *,
                        agg: str = "tree", interpret=None,
                        with_metrics: bool = True, sharding=None,
-                       param_specs=None):
+                       param_specs=None, compression=None):
     """batches: pytree (C, E, ...); alpha: (C, E); coeffs: (C,).
     Returns (new_params, metrics).
 
@@ -123,7 +125,16 @@ def fed_round_parallel(loss_fn, params, batches, alpha, coeffs, eta, *,
     federation axes.  param_specs (a PartitionSpec pytree matching
     params, see models.sharding.tree_param_specs) keeps params sharded
     over the mesh's model/FSDP axes through the round — without it the
-    aggregated params come back replicated (small-model path)."""
+    aggregated params come back replicated (small-model path).
+
+    compression: optional CompressionSpec/str — client deltas are
+    quantized right after the masked-SGD epochs, before aggregation.
+    On the flat layout the fused dequant-and-reduce kernel consumes the
+    compressed payload directly; on the tree layout the pure-jnp
+    reference round-trips the same quantization lattice.  Both paths use
+    the flattened-leaf chunk grid, so layouts (and the sequential mode)
+    stay parity-comparable."""
+    spec = resolve_compression(compression)
     deltas = jax.vmap(lambda b, a: local_sgd(loss_fn, params, b, a, eta))(
         batches, alpha)
     if sharding is not None:
@@ -131,7 +142,11 @@ def fed_round_parallel(loss_fn, params, batches, alpha, coeffs, eta, *,
     if agg == "flat":
         new_params = aggregate_deltas_flat(params, deltas, coeffs,
                                            interpret=interpret,
-                                           sharding=sharding)
+                                           sharding=sharding,
+                                           compression=spec)
+    elif spec.active:
+        new_params = aggregate_deltas_compressed_ref(params, deltas,
+                                                     coeffs, spec)
     else:
         new_params = aggregate_deltas(params, deltas, coeffs)
     if sharding is not None:
@@ -145,7 +160,7 @@ def fed_round_parallel(loss_fn, params, batches, alpha, coeffs, eta, *,
 
 def fed_round_sequential(loss_fn, params, batches, alpha, coeffs, eta, *,
                          with_metrics: bool = True, sharding=None,
-                         param_specs=None):
+                         param_specs=None, compression=None):
     """Same contract as fed_round_parallel; clients scanned to bound
     memory: only the global params, the streaming aggregation accumulator
     and ONE live client delta exist at a time — never a (C, D_total) or
@@ -155,7 +170,14 @@ def fed_round_sequential(loss_fn, params, batches, alpha, coeffs, eta, *,
     the federation axes (GSPMD psums the gradient over exactly those
     axes) while params and the accumulator stay sharded per
     ``param_specs`` (FSDP x TP over the mesh's model axes) — the
-    federated round never materializes a replicated copy of the model."""
+    federated round never materializes a replicated copy of the model.
+
+    compression round-trips each client's delta through the wire format
+    (core.compression.round_trip_tree) before it enters the accumulator
+    — the flattened-leaf chunk grid matches the parallel layout, so the
+    two modes quantize identically and differ only in f32 reduction
+    order."""
+    spec = resolve_compression(compression)
     if sharding is not None:
         params = sharding.constrain_params(params, param_specs)
 
@@ -174,6 +196,8 @@ def fed_round_sequential(loss_fn, params, batches, alpha, coeffs, eta, *,
             # (E, B, ...): batch dim 1 shards over the federation axes
             b_c = _constrain_batch(sharding, b_c, axis_dim=1)
         delta = local_sgd(loss_fn, params, b_c, a_c, eta)
+        if spec.active:
+            delta = round_trip_tree(delta, spec)
         acc = con_acc(accumulate_delta(acc, delta, c_c))
         if with_metrics:
             dn2 = dn2 + sum(jnp.sum(jnp.square(x))
@@ -190,15 +214,17 @@ def fed_round_sequential(loss_fn, params, batches, alpha, coeffs, eta, *,
 
 
 def make_fed_round(loss_fn, mode: str = "client_parallel",
-                   agg: str = "tree", interpret=None):
+                   agg: str = "tree", interpret=None, compression=None):
     """Returns fed_round(params, batches, alpha, coeffs, eta)."""
     if mode == "client_parallel":
         return functools.partial(fed_round_parallel, loss_fn, agg=agg,
-                                 interpret=interpret)
+                                 interpret=interpret,
+                                 compression=compression)
     if mode != "client_sequential":
         raise ValueError(f"mode must be client_parallel|client_sequential, "
                          f"got {mode!r}")
-    return functools.partial(fed_round_sequential, loss_fn)
+    return functools.partial(fed_round_sequential, loss_fn,
+                             compression=compression)
 
 
 def fed_train_step(loss_fn, cfg, params, batches, alpha, p_weights, eta,

@@ -1,3 +1,4 @@
+from repro.core.compression import CompressionSpec, resolve_compression
 from repro.fed.driver import Client, FederatedTrainer, RoundRecord
 from repro.fed.engine import RoundEngine
 from repro.fed.events import (Arrival, Departure, InactivityBurst,
@@ -17,7 +18,8 @@ from repro.fed.validate import (QuadraticProblem, QuadraticRunner, RunDump,
                                 TheoryValidator, generate_participation_schedule,
                                 make_quadratic_problem, validate_corpus)
 
-__all__ = ["Client", "FederatedTrainer", "RoundRecord", "RoundEngine",
+__all__ = ["CompressionSpec", "resolve_compression",
+           "Client", "FederatedTrainer", "RoundRecord", "RoundEngine",
            "Arrival", "Departure", "InactivityBurst", "ParticipationEvent",
            "StreamScheduler", "TraceShift", "FedSharding",
            "make_fed_sharding", "ArrayTask", "ClientTask", "LMTask",

@@ -85,8 +85,9 @@ class FederatedTrainer:
                  seed: int = 0, engine: Optional[str] = "plan",
                  chunk_size: int = 16, agg: str = "auto",
                  interpret=None, donate: Optional[bool] = None,
-                 with_metrics: bool = False, sharding=None,
-                 task=None, mode: str = "client_parallel"):
+                 compression=None, with_metrics: bool = False,
+                 sharding=None, task=None,
+                 mode: str = "client_parallel"):
         self.task = task
         self.mode = mode
         if loss_fn is None:
@@ -110,7 +111,10 @@ class FederatedTrainer:
         self.bound_terms = bound_terms or BoundTerms(
             D=5.0, V=20.0, gamma=10.0, E=local_epochs)
         self.rng = np.random.default_rng(seed)
-        self.round_fn = jax.jit(make_fed_round(loss_fn, "client_parallel"))
+        from repro.core.compression import resolve_compression
+        self.compression = resolve_compression(compression)
+        self.round_fn = jax.jit(make_fed_round(
+            loss_fn, "client_parallel", compression=self.compression))
         self.engine_mode = engine if engine not in (None, "off") else "host"
         if self.engine_mode not in ("host", "plan", "device"):
             raise ValueError(f"engine must be one of host|plan|device|off, "
@@ -141,6 +145,7 @@ class FederatedTrainer:
                 local_epochs=self.E, batch_size=self.B, scheme=self.scheme,
                 eta0=self.eta0, chunk_size=self.chunk_size, agg=self.agg,
                 interpret=self.interpret, donate=self.donate,
+                compression=self.compression,
                 with_metrics=self.with_metrics, sharding=self.sharding,
                 mode=self.mode)
         return self._engine

@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import scheme_coefficients
+from repro.core.compression import resolve_compression
 from repro.core.fed_step import fed_round_parallel, fed_round_sequential
 from repro.fed.task import ArrayTask
 from repro.obs.telemetry import resolve as resolve_telemetry
@@ -245,7 +246,7 @@ class RoundEngine:
                  capacity: Optional[int] = None,
                  max_samples: Optional[int] = None,
                  sharding=None, mode: str = "client_parallel",
-                 telemetry=None):
+                 telemetry=None, compression=None):
         if (task is None) == (loss_fn is None):
             raise ValueError("pass exactly one of task= or loss_fn=")
         if task is None:
@@ -268,10 +269,18 @@ class RoundEngine:
         self.scheme = scheme
         self.eta0 = eta0
         self.chunk_size = max(1, chunk_size)
+        # delta wire format (core/compression): closed over by the jitted
+        # chunk fns — a static spec, so changing it means a new engine
+        self.compression = resolve_compression(compression)
         if agg == "auto":
             # the fused Pallas launch is the TPU path; its interpret-mode
-            # emulation on CPU costs more than the per-leaf jnp tree
-            agg = "flat" if jax.default_backend() == "tpu" else "tree"
+            # emulation on CPU costs more than the per-leaf jnp tree —
+            # EXCEPT for quantized wires, where the fused dequant-and-
+            # reduce consumes the int8 payload directly and measures
+            # faster than the quantize->dequantize->einsum reference
+            # even under the interpreter
+            agg = ("flat" if (jax.default_backend() == "tpu"
+                              or self.compression.quantized) else "tree")
         self.agg = agg
         self.interpret = interpret
         self.with_metrics = with_metrics
@@ -519,11 +528,18 @@ class RoundEngine:
             (tau + 1 - lr_shift).astype(jnp.float32), 1.0)
         pspecs = (self._param_specs(params) if self.sharding is not None
                   else None)
+        if self.compression.active and pspecs is not None:
+            # the quantizer works on the flattened-leaf layout, which the
+            # model-sharded path cannot take (mixed-sharding leaf concat)
+            raise ValueError(
+                "compression is not supported with model-sharded params "
+                "(task param_specs); use replicated params or "
+                "compression='none'")
         if self.mode == "client_sequential":
             new_params, m = fed_round_sequential(
                 self.loss_fn, params, batches, alpha, coeffs, eta,
                 with_metrics=self.with_metrics, sharding=self.sharding,
-                param_specs=pspecs)
+                param_specs=pspecs, compression=self.compression)
         else:
             # model-spec'd params must take the tree path: the flat
             # layout concatenates mixed-sharding delta leaves (the GSPMD
@@ -534,7 +550,7 @@ class RoundEngine:
                 self.loss_fn, params, batches, alpha, coeffs, eta,
                 agg=agg, interpret=self.interpret,
                 with_metrics=self.with_metrics, sharding=self.sharding,
-                param_specs=pspecs)
+                param_specs=pspecs, compression=self.compression)
         return new_params, {"s": s, "eta": eta,
                             "delta_norm": m["delta_norm"]}
 

@@ -245,7 +245,8 @@ class FuzzHarness:
                  batch_size: int = 5, chunk_size: int = 4,
                  max_samples: int = 60, scheme: str = "C",
                  eta0: float = 1.0, data_seed: int = 0,
-                 engine_mode: str = "client_parallel", sharding=None):
+                 engine_mode: str = "client_parallel", sharding=None,
+                 compression=None):
         from repro.configs.paper import SYNTHETIC_LR
         from repro.data import synthetic_federation
         from repro.fed.driver import Client
@@ -274,7 +275,7 @@ class FuzzHarness:
             local_epochs=local_epochs, batch_size=batch_size,
             scheme=scheme, eta0=eta0, chunk_size=chunk_size,
             capacity=capacity, max_samples=max_samples,
-            mode=engine_mode, sharding=sharding)
+            mode=engine_mode, sharding=sharding, compression=compression)
         # warm-up: a 7-round span chunks into 4+2+1, compiling every
         # pow2 chunk length the cases can produce — in both modes
         for mode in ("device", "plan"):
@@ -477,20 +478,49 @@ def _check_plan_parity(seed: int, device: dict, plan: dict) -> None:
 
 # -- backend cross-checking ----------------------------------------------------
 
+# Measured parity tolerance for the quantized-vs-f32 cross-check.  The
+# int8 round-off (~absmax/254 per element per round) enters the same
+# post-event chaotic amplification as the flat-vs-tree layout caveat in
+# docs/engine.md, so at the harness's adversarial eta0 = 1 the final
+# divergence is set by the dynamics, not the quantizer: measured over
+# the 30-seed backend corpus (full-length cases, <= 27 rounds) max
+# |param| divergence is 4.6e-1, mean 5.2e-2.  The gate is ~2x the
+# measured max; it pins the scale (weight-sanity allows |w| <= 1e3)
+# while the *sharp* invariant is the same-wire one: two quantized
+# backends (parallel vmap vs sequential accumulate) share one
+# quantization lattice and measured bit-exact over the same corpus,
+# so they keep the ordinary exact-law tolerance below.
+QUANT_VS_F32_ATOL = 1.0
+QUANT_VS_F32_RTOL = 1.0
+
+# Engine kwargs per backend name; "sharded" is special-cased (needs a
+# mesh).  The quantized legs run the int8 wire format end-to-end.
+_BACKEND_SPECS = {
+    "client_parallel": {},
+    "client_sequential": {"engine_mode": "client_sequential"},
+    "quantized": {"compression": "int8"},
+    "quantized_sequential": {"engine_mode": "client_sequential",
+                             "compression": "int8"},
+}
+
+
 def make_backend_pool(backends=("client_parallel", "client_sequential"),
                       *, sharding=None, **kw) -> dict:
     """One warm FuzzHarness per execution backend, identical geometry
     and data: "client_parallel" (fused vmap + flat Pallas agg),
-    "client_sequential" (streaming accumulate), "sharded" (the
-    client-axis sharded engine — pass sharding=, only meaningful under
-    a multi-device mesh; tests/_fuzz_backends_check.py re-execs with 4
-    virtual devices)."""
+    "client_sequential" (streaming accumulate), "quantized" /
+    "quantized_sequential" (the int8 compressed-delta wire format on
+    either layout), "sharded" (the client-axis sharded engine — pass
+    sharding=, only meaningful under a multi-device mesh;
+    tests/_fuzz_backends_check.py re-execs with 4 virtual devices)."""
     pool = {}
     for b in backends:
         if b == "sharded":
             if sharding is None:
                 raise ValueError('backend "sharded" needs sharding=')
             pool[b] = FuzzHarness(sharding=sharding, **kw)
+        elif b in _BACKEND_SPECS:
+            pool[b] = FuzzHarness(**_BACKEND_SPECS[b], **kw)
         else:
             pool[b] = FuzzHarness(engine_mode=b, **kw)
     return pool
@@ -557,12 +587,20 @@ def run_cross_backend_case(pool: dict, seed: int, *,
         results[name] = _execute(h, case, mode=mode, honor_kills=False)
         _check_zero_recompile(seed, h)
     max_err = 0.0
+    ref_wire = pool[reference].engine.compression.name
     for name in pool:
         if name == reference:
             continue
+        # backends on the same wire format walk one quantization lattice
+        # and keep the exact-law tolerance; a wire-format mismatch (int8
+        # leg vs f32 reference) is held to the measured gate instead
+        a, r = ((atol, rtol)
+                if pool[name].engine.compression.name == ref_wire
+                else (max(atol, QUANT_VS_F32_ATOL),
+                      max(rtol, QUANT_VS_F32_RTOL)))
         max_err = max(max_err, _check_backend_parity(
             seed, name, results[reference], results[name],
-            atol=atol, rtol=rtol))
+            atol=a, rtol=r))
     return {"seed": seed, "rounds": case.total_rounds,
             "backends": sorted(pool), "max_param_err": max_err,
             "events_applied":

@@ -205,8 +205,8 @@ def make_scenario(name: str, *, seed: int = 0, **kwargs) -> Scenario:
 
 def build_scheduler(sc: Scenario, *, mode: str = "device",
                     chunk_size: int = 16, agg: str = "auto",
-                    interpret=None, with_metrics: bool = False,
-                    telemetry=None):
+                    interpret=None, compression=None,
+                    with_metrics: bool = False, telemetry=None):
     """StreamScheduler for a scenario on the paper's SYNTHETIC logreg."""
     import jax
 
@@ -221,7 +221,8 @@ def build_scheduler(sc: Scenario, *, mode: str = "device",
         capacity=sc.capacity, max_samples=sc.max_samples,
         local_epochs=sc.local_epochs, batch_size=sc.batch_size,
         scheme=sc.scheme, eta0=sc.eta0, chunk_size=chunk_size, agg=agg,
-        interpret=interpret, with_metrics=with_metrics, seed=sc.seed,
+        interpret=interpret, compression=compression,
+        with_metrics=with_metrics, seed=sc.seed,
         mode=mode, events=sc.events, telemetry=telemetry)
 
 

@@ -97,7 +97,7 @@ class StreamScheduler:
                  scheme: str = "C", eta0: float = 0.01,
                  chunk_size: int = 16, agg: str = "auto",
                  interpret=None, donate: Optional[bool] = None,
-                 with_metrics: bool = False,
+                 compression=None, with_metrics: bool = False,
                  reboot_boost: float = 3.0, fast_reboot: bool = True,
                  horizon: Optional[int] = None,
                  bound_terms: Optional[BoundTerms] = None,
@@ -140,6 +140,7 @@ class StreamScheduler:
                 local_epochs=local_epochs, batch_size=batch_size,
                 scheme=scheme, eta0=eta0, chunk_size=chunk_size, agg=agg,
                 interpret=interpret, donate=donate,
+                compression=compression,
                 with_metrics=with_metrics, capacity=capacity,
                 max_samples=max_samples, sharding=sharding,
                 mode=engine_mode, telemetry=telemetry)
@@ -378,6 +379,7 @@ class StreamScheduler:
         return {"local_epochs": eng.E, "batch_size": eng.B,
                 "scheme": eng.scheme, "eta0": eng.eta0,
                 "chunk_size": eng.chunk_size, "agg": eng.agg,
+                "compression": eng.compression.name,
                 "with_metrics": eng.with_metrics,
                 "engine_mode": eng.mode, "capacity": eng.capacity,
                 "max_samples": eng.nmax, "mode": self.mode}
@@ -432,6 +434,8 @@ class StreamScheduler:
                 batch_size=cfg["batch_size"], scheme=cfg["scheme"],
                 eta0=cfg["eta0"], chunk_size=cfg["chunk_size"],
                 agg=cfg["agg"], with_metrics=cfg["with_metrics"],
+                # pre-compression checkpoints carry no key: f32 wire
+                compression=cfg.get("compression", "none"),
                 capacity=cfg["capacity"], max_samples=cfg["max_samples"],
                 sharding=sharding, interpret=interpret, donate=donate,
                 mode=cfg["engine_mode"], telemetry=telemetry)
@@ -440,6 +444,11 @@ class StreamScheduler:
                 raise ValueError(
                     f"reused engine capacity {engine.capacity} != "
                     f"checkpoint capacity {cfg['capacity']}")
+            if engine.compression.name != cfg.get("compression", "none"):
+                raise ValueError(
+                    f"reused engine compression "
+                    f"{engine.compression.name!r} != checkpoint "
+                    f"compression {cfg.get('compression', 'none')!r}")
             for slot in range(engine.capacity):
                 engine.evict(slot)
         # re-stage every occupied slot (one fused burst; trace CDFs ride

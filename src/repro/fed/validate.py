@@ -179,13 +179,22 @@ class QuadraticRunner:
 
     def __init__(self, problem: Optional[QuadraticProblem] = None, *,
                  local_epochs: int = 4, batch_size: int = 4,
-                 eta0: float = 0.4, chunk_size: int = 8):
+                 eta0: float = 0.4, chunk_size: int = 8,
+                 compression=None):
         self.problem = problem if problem is not None \
             else make_quadratic_problem()
         self.E = local_epochs
         self.B = batch_size
         self.eta0 = eta0
         self.chunk_size = chunk_size
+        # delta wire format for every run this runner executes: quantized
+        # runs are scored against the same Thm 3.1 envelope — a sane
+        # quantizer perturbs the trajectory below the bound's slack,
+        # while an over-coarse one (e.g. "int8:levels=1,chunk=4096")
+        # destroys the debiased update and trips the validator (the
+        # mutation smoke in tests/test_compression.py pins this)
+        from repro.core.compression import resolve_compression
+        self.compression = resolve_compression(compression)
         pr = self.problem
         a_mat = jnp.asarray(pr.a_diag, jnp.float32)
         c_mat = jnp.asarray(pr.c, jnp.float32)
@@ -222,7 +231,7 @@ class QuadraticRunner:
                 task=self.task, clients=self._clients(),
                 local_epochs=self.E, batch_size=self.B, scheme=scheme,
                 eta0=self.eta0, chunk_size=self.chunk_size,
-                capacity=pr.n_clients,
+                capacity=pr.n_clients, compression=self.compression,
                 max_samples=int(pr.n_k.max()))
         return self._engines[scheme]
 
@@ -349,13 +358,15 @@ class TheoryValidator:
 
 def validate_corpus(seeds, *, runner: Optional[QuadraticRunner] = None,
                     rounds: int = 64, slack: float = 1.0,
-                    factor: float = 0.6) -> dict:
+                    factor: float = 0.6, compression=None) -> dict:
     """Run + validate a seed corpus: each seed fuzzes a participation
     schedule, executes it under all three schemes, and scores every run
     against the bound plus the cross-scheme ordering.  Shared by the
-    tier-1 test and benchmarks/fuzz_bench.py."""
+    tier-1 test and benchmarks/fuzz_bench.py.  ``compression`` selects
+    the delta wire format of the default runner — quantized corpora are
+    held to the same envelope and Table-1 ordering as f32."""
     if runner is None:
-        runner = QuadraticRunner()
+        runner = QuadraticRunner(compression=compression)
     validator = TheoryValidator(runner.problem, slack=slack)
     rows = []
     for seed in seeds:

@@ -18,6 +18,10 @@ from repro.kernels.masked_sgd import masked_sgd as _masked_sgd
 from repro.kernels.ssd_chunk import ssd_intra_chunk as _ssd_intra
 from repro.kernels.weighted_agg import resolve_interpret
 from repro.kernels.weighted_agg import weighted_agg as _weighted_agg
+from repro.kernels.weighted_agg import (weighted_agg_quant as
+                                        _weighted_agg_quant)
+from repro.kernels.weighted_agg import (weighted_agg_quant_sharded as
+                                        _weighted_agg_quant_sharded)
 from repro.kernels.weighted_agg import (weighted_agg_sharded as
                                         _weighted_agg_sharded)
 
@@ -46,6 +50,25 @@ def weighted_agg_sharded(coeffs, deltas, *, mesh, axis="data", block=2048,
     return _weighted_agg_sharded(coeffs, deltas, mesh=mesh, axis=axis,
                                  block=block, interpret=_interp(interpret),
                                  k_block=k_block)
+
+
+def weighted_agg_quant(coeffs, payload, scales, *, chunk, block=2048,
+                       interpret=None, k_block=None):
+    """Fused dequant-and-reduce over int8 payload + per-chunk f32 scales
+    (core.compression.quantize_chunked layout) -> (Dp,) f32."""
+    return _weighted_agg_quant(coeffs, payload, scales, chunk=chunk,
+                               block=block, interpret=_interp(interpret),
+                               k_block=k_block)
+
+
+def weighted_agg_quant_sharded(coeffs, payload, scales, *, chunk, mesh,
+                               axis="data", block=2048, interpret=None,
+                               k_block=None):
+    """weighted_agg_quant over a mesh-sharded client axis: one local
+    dequant-and-reduce launch per device + an f32 psum epilogue."""
+    return _weighted_agg_quant_sharded(
+        coeffs, payload, scales, chunk=chunk, mesh=mesh, axis=axis,
+        block=block, interpret=_interp(interpret), k_block=k_block)
 
 
 def weighted_agg_tree(params, deltas_tree, coeffs, *, interpret=None):

@@ -11,6 +11,15 @@ def weighted_agg_ref(coeffs, deltas):
                       deltas.astype(jnp.float32))
 
 
+def weighted_agg_quant_ref(coeffs, payload, scales, *, chunk):
+    """(K,), (K,Dp) int8, (K,Dp/chunk) f32 -> (Dp,) f32: dequantize then
+    reduce — the allclose target for the fused dequant-and-reduce kernel."""
+    K, Dp = payload.shape
+    deltas = (payload.astype(jnp.float32).reshape(K, Dp // chunk, chunk)
+              * scales[..., None]).reshape(K, Dp)
+    return weighted_agg_ref(coeffs, deltas)
+
+
 def masked_sgd_ref(w, g, eta_alpha):
     return (w.astype(jnp.float32)
             - eta_alpha.astype(jnp.float32) * g.astype(jnp.float32)

@@ -24,14 +24,26 @@ launch per device over its client slab and finishes with a cross-device
 `psum` epilogue, so the reduced (D,) vector comes back replicated on every
 device without a host round-trip.
 
+For compressed client deltas (core/compression.py), `weighted_agg_quant`
+fuses dequantization into the same reduction: each grid step loads a
+(KBLK, BLK) int8 tile plus its per-chunk f32 scale slab, dequantizes in
+VMEM and accumulates coeffs·deltas in f32 — the compressed payload never
+materializes as an f32 (K, D) buffer in HBM.
+
+The tile geometry (DEFAULT_BLOCK / MAX_SINGLE_K / DEFAULT_K_BLOCK) is
+env-overridable via REPRO_AGG_BLOCK / REPRO_AGG_MAX_SINGLE_K /
+REPRO_AGG_K_BLOCK for real-hardware re-tunes (see docs/engine.md).
+
 Usage::
 
     out = weighted_agg(coeffs, deltas)                    # (K,),(K,D)->(D,)
     out = weighted_agg_sharded(coeffs, deltas, mesh=mesh) # client-sharded K
+    out = weighted_agg_quant(coeffs, payload, scales, chunk=256)  # int8
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -39,11 +51,27 @@ from jax.experimental import pallas as pl
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-DEFAULT_BLOCK = 2048
+
+def _env_int(name: str, default: int) -> int:
+    """Tile-geometry override hook (REPRO_AGG_*): real-hardware re-tunes
+    should not need code edits.  Read once at import."""
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    try:
+        val = int(raw)
+    except ValueError:
+        raise ValueError(f"{name} must be an integer, got {raw!r}") from None
+    if val < 1:
+        raise ValueError(f"{name} must be >= 1, got {val}")
+    return val
+
+
+DEFAULT_BLOCK = _env_int("REPRO_AGG_BLOCK", 2048)
 # Largest client axis kept fully resident per tile before switching to the
 # streamed multi-block K layout.
-MAX_SINGLE_K = 64
-DEFAULT_K_BLOCK = 32
+MAX_SINGLE_K = _env_int("REPRO_AGG_MAX_SINGLE_K", 64)
+DEFAULT_K_BLOCK = _env_int("REPRO_AGG_K_BLOCK", 32)
 
 
 def resolve_interpret(interpret):
@@ -129,6 +157,130 @@ def weighted_agg(coeffs, deltas, *, block: int = DEFAULT_BLOCK,
         interpret=interpret,
     )(coeffs.reshape(1, Kp), deltas)
     return out[0, :D]
+
+
+def _agg_kernel_quant(c_ref, p_ref, s_ref, o_ref, *, chunk):
+    """Fused dequant-and-reduce tile: int8 codes and their scale slab are
+    loaded into VMEM, dequantized on-chip, and reduced into the revisited
+    f32 output block — the compressed payload never exists as an f32
+    (K, D) buffer in HBM."""
+    k = pl.program_id(1)
+    codes = p_ref[...].astype(jnp.float32)       # (KBLK, BLK) from int8
+    scales = s_ref[...]                          # (KBLK, BLK // chunk)
+    kblk, blk = codes.shape
+    d = (codes.reshape(kblk, blk // chunk, chunk)
+         * scales[:, :, None]).reshape(kblk, blk)
+    part = jnp.dot(c_ref[...].astype(jnp.float32),     # (1, KBLK)
+                   d, preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k > 0)
+    def _accumulate():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block", "interpret",
+                                             "k_block"))
+def weighted_agg_quant(coeffs, payload, scales, *,
+                       chunk: int, block: int = DEFAULT_BLOCK,
+                       interpret: bool | None = None,
+                       k_block: int | None = None):
+    """Fused dequant-and-reduce: coeffs (K,) f32, payload (K, Dp) int8,
+    scales (K, Dp/chunk) f32 -> (Dp,) f32.
+
+    Dp must already be a multiple of ``chunk`` (quantize_chunked pads);
+    the caller slices the result back to the un-padded D.  The grid is
+    always the streamed multi-block-K layout of _agg_kernel_ktiled —
+    each step loads a (KBLK, BLK) int8 tile plus its (KBLK, BLK/chunk)
+    scale slab, dequantizes in VMEM and accumulates coeffs·deltas in f32.
+    ``block`` is rounded down to a chunk multiple so scale groups never
+    straddle tiles.
+    """
+    interpret = resolve_interpret(interpret)
+    K, Dp0 = payload.shape
+    if Dp0 % chunk:
+        raise ValueError(f"payload width {Dp0} not a multiple of the "
+                         f"scale chunk {chunk} (quantize_chunked pads)")
+    if scales.shape != (K, Dp0 // chunk):
+        raise ValueError(f"scales shape {scales.shape} != "
+                         f"{(K, Dp0 // chunk)}")
+    block = max(chunk, block - block % chunk)
+    pad = (-Dp0) % block
+    if pad:
+        payload = jnp.pad(payload, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad // chunk)))
+    Dp = Dp0 + pad
+    coeffs = coeffs.astype(jnp.float32)
+
+    if k_block is None:
+        k_block = K if K <= MAX_SINGLE_K else DEFAULT_K_BLOCK
+    k_block = min(k_block, K)
+    kpad = (-K) % k_block                # zero coeff rows contribute 0
+    if kpad:
+        coeffs = jnp.pad(coeffs, (0, kpad))
+        payload = jnp.pad(payload, ((0, kpad), (0, 0)))
+        scales = jnp.pad(scales, ((0, kpad), (0, 0)))
+    Kp = K + kpad
+
+    out = pl.pallas_call(
+        functools.partial(_agg_kernel_quant, chunk=chunk),
+        grid=(Dp // block, Kp // k_block),
+        in_specs=[
+            pl.BlockSpec((1, k_block), lambda i, k: (0, k)),
+            pl.BlockSpec((k_block, block), lambda i, k: (k, i)),
+            pl.BlockSpec((k_block, block // chunk), lambda i, k: (k, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i, k: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Dp), jnp.float32),
+        interpret=interpret,
+    )(coeffs.reshape(1, Kp), payload, scales)
+    return out[0, :Dp0]
+
+
+def _local_quant_agg_psum(coeffs, payload, scales, *, chunk, axes, block,
+                          interpret, k_block):
+    """Per-shard body of the quantized sharded path: the compressed slab
+    is dequant-reduced locally, and only the f32 (D,) partial crosses
+    devices in the psum epilogue — the byte win lands on the wire."""
+    out = weighted_agg_quant(coeffs, payload, scales, chunk=chunk,
+                             block=block, interpret=interpret,
+                             k_block=k_block)
+    return jax.lax.psum(out, axes)
+
+
+def weighted_agg_quant_sharded(coeffs, payload, scales, *, chunk, mesh,
+                               axis="data", block: int = DEFAULT_BLOCK,
+                               interpret: bool | None = None,
+                               k_block: int | None = None):
+    """Cross-device weighted_agg_quant: coeffs (K,), payload (K, Dp) int8
+    and scales (K, Dp/chunk) sharded over the federation ``axis`` of
+    ``mesh`` on the client dim -> (Dp,) f32, replicated.
+
+    Same contract as weighted_agg_sharded (composite axes, K must divide
+    the shard count), but each device launches the fused dequant-and-
+    reduce kernel over its compressed client slab before the f32 psum.
+    """
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    K = payload.shape[0]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if K % n:
+        raise ValueError(
+            f"client axis {K} not divisible by mesh axes {axes!r}={n}; "
+            f"pad the client axis (FedSharding.pad_capacity)")
+    entry = axes[0] if len(axes) == 1 else axes
+    local = functools.partial(
+        _local_quant_agg_psum, chunk=chunk, axes=axes, block=block,
+        interpret=resolve_interpret(interpret), k_block=k_block)
+    # check_rep=False: shard_map has no replication rule for pallas_call
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(entry), P(entry, None), P(entry, None)),
+                   out_specs=P(), check_rep=False)
+    return fn(coeffs, payload, scales)
 
 
 def _local_agg_psum(coeffs, deltas, *, axes, block, interpret, k_block):

@@ -127,6 +127,11 @@ def main(argv=None) -> dict:
                          "the checkpoint's own mode unless given "
                          "explicitly — overriding it breaks exact resume)")
     ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--compress", default=None,
+                    choices=["none", "bf16", "int8", "int8-topk"],
+                    help="client-delta wire format (default: none; with "
+                         "--resume the checkpoint's own format unless "
+                         "given explicitly)")
     ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
                     help="run supervised with a seeded FaultPlan injected "
                          "at every boundary; adds a 'chaos' block to the "
@@ -177,8 +182,10 @@ def main(argv=None) -> dict:
                   else sc.eval_every)
 
     if args.resume:
-        # the checkpoint's own mode unless --mode was given explicitly
+        # the checkpoint's own mode/wire unless given explicitly
         overrides = {} if args.mode is None else {"mode": args.mode}
+        if args.compress is not None:
+            overrides["compression"] = args.compress
         sch = StreamScheduler.restore(
             args.resume, loss_fn=_make_loss(), eval_fn=_paper_eval_fn(),
             telemetry=telemetry, **overrides)
@@ -187,12 +194,14 @@ def main(argv=None) -> dict:
     elif args.trace:
         sch = build_scheduler(
             _strip_events(sc), mode=args.mode or "device",
-            chunk_size=args.chunk_size, telemetry=telemetry)
+            chunk_size=args.chunk_size, compression=args.compress,
+            telemetry=telemetry)
         timed = load_trace(args.trace)
     else:
         sch = build_scheduler(
             _strip_events(sc), mode=args.mode or "device",
-            chunk_size=args.chunk_size, telemetry=telemetry)
+            chunk_size=args.chunk_size, compression=args.compress,
+            telemetry=telemetry)
         timed = [(j / args.events_per_sec, e) for j, e in
                  enumerate(sorted(sc.events, key=lambda e: e.tau))]
     start_tau = sch._next_tau             # 0 fresh; checkpoint tau resumed
@@ -244,6 +253,7 @@ def main(argv=None) -> dict:
     served = sch._next_tau - start_tau    # this invocation's rounds only
     summary = summarize_history(sch.history)
     summary.update(scenario=sc.name, wall_s=round(wall, 3),
+                   compression=sch.engine.compression.name,
                    rounds_served=served,
                    rounds_per_sec=round(served / wall, 2),
                    **{k: v for k, v in svc.stats().items()

@@ -33,6 +33,11 @@ def main(argv=None) -> dict:
                          "the checkpoint's own mode unless given "
                          "explicitly — overriding it breaks exact resume)")
     ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--compress", default=None,
+                    choices=["none", "bf16", "int8", "int8-topk"],
+                    help="client-delta wire format (default: none; with "
+                         "--restore the checkpoint's own format unless "
+                         "given explicitly)")
     ap.add_argument("--json", default=None,
                     help="also write the summary to this path")
     ap.add_argument("--save-state", default=None, metavar="DIR",
@@ -67,6 +72,8 @@ def main(argv=None) -> dict:
         # (argparse's default must not silently flip a plan checkpoint
         # to device sampling — that would break exact resume)
         overrides = {} if args.mode is None else {"mode": args.mode}
+        if args.compress is not None:
+            overrides["compression"] = args.compress
         sch = StreamScheduler.restore(args.restore,
                                       loss_fn=make_loss_fn(SYNTHETIC_LR),
                                       eval_fn=_paper_eval_fn(),
@@ -87,6 +94,7 @@ def main(argv=None) -> dict:
                                     n_rounds=args.rounds,
                                     eval_every=args.eval_every,
                                     chunk_size=args.chunk_size,
+                                    compression=args.compress,
                                     telemetry=telemetry)
         rounds_ran = summary["rounds"]
     wall = time.perf_counter() - t0
@@ -103,6 +111,7 @@ def main(argv=None) -> dict:
         sch.save(args.save_state)
         if not args.quiet:
             print(f"# resumable checkpoint written to {args.save_state}")
+    summary["compression"] = sch.engine.compression.name
     summary["wall_s"] = round(wall, 3)
     # rounds run THIS invocation (a resumed history also holds the
     # pre-checkpoint rounds, which this wall clock never paid for)
@@ -110,7 +119,7 @@ def main(argv=None) -> dict:
 
     if not args.quiet:
         print(f"# scenario {sc.name} ({sc.notes}), seed {sc.seed}, "
-              f"mode {sch.mode}")
+              f"mode {sch.mode}, wire {sch.engine.compression.name}")
         print("tau,loss,acc,eta,n_active,event")
         for h in sch.history:
             if h.event or not (h.loss != h.loss):   # event or evaluated

@@ -88,12 +88,17 @@ class FedTop:
                 rate = (rounds - r0) / (now - t0)
         self._prev = (now, rounds)
 
+        eng = getattr(getattr(svc, "scheduler", None), "engine", None)
+        wire = (eng.compression.name if eng is not None
+                and hasattr(eng, "compression") else "?")
+
         W = self.width
         bar = "-" * W
         lines = [
             f"fed_top  gen={st['generation']}  "
             f"{'supervised' if st['supervised'] else 'unsupervised'}  "
             f"{'PAUSED' if st['paused'] else 'running' if st['running'] else 'stopped'}"
+            f"  wire={wire}"
             .ljust(W),
             bar,
             f"rounds     tau={rounds}"

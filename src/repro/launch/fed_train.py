@@ -67,6 +67,10 @@ def main(argv=None) -> dict:
                     help="engine execution mode (default: the arch "
                          "config's fed.mode)")
     ap.add_argument("--agg", default="auto", choices=["auto", "tree", "flat"])
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "bf16", "int8", "int8-topk"],
+                    help="client-delta wire format for aggregation "
+                         "(docs/compression.md)")
     ap.add_argument("--chunk-size", type=int, default=8)
     ap.add_argument("--eval-every", type=int, default=4)
     ap.add_argument("--full", action="store_true",
@@ -136,8 +140,8 @@ def main(argv=None) -> dict:
         engine_mode=mode, capacity=capacity, max_samples=args.samples,
         local_epochs=args.local_epochs, batch_size=args.batch,
         scheme=args.scheme, eta0=args.eta0, chunk_size=args.chunk_size,
-        agg=args.agg, sharding=sharding, seed=args.seed, mode="device",
-        evaluate=evaluate, events=events)
+        agg=args.agg, compression=args.compress, sharding=sharding,
+        seed=args.seed, mode="device", evaluate=evaluate, events=events)
 
     if not args.quiet:
         mesh_desc = (dict(sharding.mesh.shape) if sharding is not None
@@ -145,7 +149,8 @@ def main(argv=None) -> dict:
         print(f"arch={cfg.name} params={n_params:,} mode={mode} "
               f"scheme={args.scheme} C={args.clients} "
               f"E={args.local_epochs} B={args.batch} S={args.seq} "
-              f"capacity={sch.engine.capacity} mesh={mesh_desc}")
+              f"capacity={sch.engine.capacity} mesh={mesh_desc} "
+              f"wire={sch.engine.compression.name}")
 
     t0 = time.perf_counter()
     sch.run(args.rounds, eval_every=args.eval_every)
@@ -163,6 +168,7 @@ def main(argv=None) -> dict:
 
     losses = [l for _, l, _ in evals if l == l]
     return {"arch": cfg.name, "mode": mode, "params": n_params,
+            "compression": sch.engine.compression.name,
             "rounds": args.rounds, "wall_s": round(wall, 3),
             "rounds_per_sec": round(args.rounds / wall, 3),
             "final_loss": losses[-1] if losses else float("nan"),

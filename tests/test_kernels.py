@@ -76,6 +76,81 @@ def test_weighted_agg_property(K, D, block):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
+def _quantized(K, D, chunk, seed=0):
+    from repro.core.compression import quantize_chunked
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.uniform(0, 1, K), jnp.float32)
+    flat = jnp.asarray(rng.normal(size=(K, D)) * 0.3, jnp.float32)
+    payload, scales = quantize_chunked(flat, chunk=chunk)
+    return c, payload, scales
+
+
+@pytest.mark.parametrize("K,k_block", [(1, None), (8, None), (32, 8),
+                                       (70, None)])  # 70 > MAX_SINGLE_K
+@pytest.mark.parametrize("D,chunk", [(256, 64), (1000, 128), (4096, 256)])
+def test_weighted_agg_quant_matches_ref(K, k_block, D, chunk):
+    """Fused dequant-and-reduce == dequantize-then-reduce oracle, across
+    chunk geometries, the streamed multi-block-K layout, and the
+    auto-tiled large-K path."""
+    c, payload, scales = _quantized(K, D, chunk)
+    got = ops.weighted_agg_quant(c, payload, scales, chunk=chunk,
+                                 k_block=k_block)
+    want = ref.weighted_agg_quant_ref(c, payload, scales, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_weighted_agg_quant_block_not_chunk_aligned():
+    """block is re-floored to a chunk multiple internally; a block
+    smaller than chunk must still work (clamped up to one chunk)."""
+    c, payload, scales = _quantized(4, 2048, 256)
+    want = ref.weighted_agg_quant_ref(c, payload, scales, chunk=256)
+    for block in (300, 128, 512):
+        got = ops.weighted_agg_quant(c, payload, scales, chunk=256,
+                                     block=block)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_weighted_agg_quant_rejects_bad_shapes():
+    c, payload, scales = _quantized(4, 512, 128)
+    with pytest.raises(ValueError):
+        ops.weighted_agg_quant(c, payload, scales[:, :-1], chunk=128)
+    with pytest.raises(ValueError):
+        ops.weighted_agg_quant(c, payload[:, :-1], scales, chunk=128)
+
+
+def test_weighted_agg_quant_never_materializes_f32_deltas():
+    """The acceptance criterion of the fused path: no f32 tensor of the
+    full (K, D) payload size exists outside the pallas_call — the
+    dequantized deltas live only in VMEM tiles."""
+    K, D, chunk = 8, 4096, 256
+    c, payload, scales = _quantized(K, D, chunk)
+    jaxpr = jax.make_jaxpr(
+        lambda c, p, s: ops.weighted_agg_quant(c, p, s, chunk=chunk))(
+        c, payload, scales)
+
+    def walk(jxp):
+        for eqn in jxp.eqns:
+            if eqn.primitive.name == "pallas_call":
+                continue                  # VMEM tiles are allowed
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is None or not hasattr(aval, "shape"):
+                    continue
+                if (aval.dtype == jnp.float32
+                        and int(np.prod(aval.shape or (1,))) >= K * D):
+                    raise AssertionError(
+                        f"f32 {aval.shape} materialized by "
+                        f"{eqn.primitive.name}")
+            for val in eqn.params.values():
+                if hasattr(val, "eqns"):                # Jaxpr
+                    walk(val)
+                elif hasattr(val, "jaxpr"):             # ClosedJaxpr
+                    walk(val.jaxpr)
+    walk(jaxpr.jaxpr)
+
+
 @pytest.mark.parametrize("D", [128, 5000, 16384])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("alpha", [0.0, 1.0])
