@@ -34,6 +34,8 @@ def main() -> None:
                     help="skip the rounds/sec engine benchmark")
     ap.add_argument("--skip-stream", action="store_true",
                     help="skip the streaming-participation benchmark")
+    ap.add_argument("--skip-bank", action="store_true",
+                    help="skip the client-bank / cohort-prefetch benchmark")
     ap.add_argument("--skip-service", action="store_true",
                     help="skip the concurrent-ingestion service benchmark")
     ap.add_argument("--skip-fuzz", action="store_true",
@@ -143,6 +145,21 @@ def main() -> None:
         print(f"admit_us,{res['admit_us']}")
         print(f"evict_us,{res['evict_us']}")
         print(f"# wrote {args.stream_json}")
+        sys.stdout.flush()
+
+    if not args.skip_bank:
+        from benchmarks.bank_bench import main as bank_main
+        res = bank_main(args.stream_json)
+        print("\n# bank: metric,value")
+        for mode, rps in res["rounds_per_sec"].items():
+            print(f"{mode},{rps}")
+        print(f"speedup_prefetch_vs_sync,{res['speedup_prefetch_vs_sync']}")
+        print(f"staging_overlap_fraction,{res['staging_overlap_fraction']}")
+        print("# bank sweep: fleet,hot_slots,rounds_per_sec")
+        for row in res["fleet_sweep"]:
+            print(f"{row['fleet']},{row['hot_slots']},"
+                  f"{row['rounds_per_sec']}")
+        print(f"# merged into {args.stream_json}")
         sys.stdout.flush()
 
     if not args.skip_service:

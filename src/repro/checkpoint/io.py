@@ -286,7 +286,8 @@ def _verify_npz(path: str, manifest: dict) -> None:
 def save_fed_checkpoint(path: str, params, state: dict, *,
                         history: dict = None, config: dict = None,
                         extra: dict = None, injector=None,
-                        telemetry=None) -> None:
+                        telemetry=None,
+                        client_chunks: bool = False) -> None:
     """Persist a federation run's complete restart state.
 
     ``state`` is FedState.to_dict() (plain data + ndarrays; the pending
@@ -298,6 +299,14 @@ def save_fed_checkpoint(path: str, params, state: dict, *,
     (``blob/...``); the manifest holds the JSON skeletons, the npz
     SHA-256 and the true dtype of every non-native (bf16) leaf.
 
+    ``client_chunks=True`` (the bank-scale format, fed-checkpoint-v2)
+    writes each client's payload as its own ``clients/client-<id>.npz``
+    — streamed one client at a time, so a >=GB fleet never materializes
+    twice — with a per-chunk SHA-256 recorded in the manifest.  The
+    commit order is unchanged: chunks, then the main npz, then the
+    manifest, each atomic — a kill at any byte leaves the previous
+    checkpoint loadable, and every chunk is checksummed on load.
+
     Both files are written atomically (tmp + fsync + rename), npz first —
     the manifest is the commit record, so a kill at any byte leaves the
     previous checkpoint loadable.  ``injector`` is the fault hook
@@ -306,11 +315,33 @@ def save_fed_checkpoint(path: str, params, state: dict, *,
     tel = resolve_telemetry(telemetry)
     with tel.span("ckpt.save", path=path):
         os.makedirs(path, exist_ok=True)
+        chunk_recs = None
+        chunk_bytes = 0
+        if client_chunks:
+            state = dict(state)
+            clients = state.pop("clients")
+            chunk_dir = os.path.join(path, "clients")
+            os.makedirs(chunk_dir, exist_ok=True)
+            chunk_recs = []
+            for idx, cdict in enumerate(clients):
+                c_arrays: dict = {}
+                skel = jsonify_tree(cdict, c_arrays, prefix="c")
+                enc, dtypes = _encode_arrays(c_arrays)
+                fname = f"client-{idx:08d}.npz"
+                fpath = os.path.join(chunk_dir, fname)
+                sha = _atomic_savez(fpath, enc, injector=injector)
+                chunk_recs.append({"file": f"clients/{fname}",
+                                   "skeleton": skel,
+                                   "array_dtypes": dtypes,
+                                   "sha256": sha})
+                chunk_bytes += os.path.getsize(fpath)
+            state["clients"] = []       # stored chunked; see manifest
         flat = _flatten(params)
         arrays = {f"params/{k}": np.asarray(jax.device_get(v))
                   for k, v in flat.items()}
         manifest = {
-            "format": "fed-checkpoint-v1",
+            "format": ("fed-checkpoint-v2" if client_chunks
+                       else "fed-checkpoint-v1"),
             "state": jsonify_tree(state, arrays, prefix="blob/state"),
             "history": (jsonify_tree(history, arrays,
                                      prefix="blob/history")
@@ -319,6 +350,8 @@ def save_fed_checkpoint(path: str, params, state: dict, *,
             "extra": extra or {},
             "param_keys": sorted(flat),
         }
+        if chunk_recs is not None:
+            manifest["client_chunks"] = chunk_recs
         enc, dtypes = _encode_arrays(arrays)
         npz_path = os.path.join(path, "fed_checkpoint.npz")
         sha = _atomic_savez(npz_path, enc, injector=injector)
@@ -326,13 +359,39 @@ def save_fed_checkpoint(path: str, params, state: dict, *,
         manifest["npz_sha256"] = sha
         _atomic_write_text(os.path.join(path, "fed_manifest.json"),
                            json.dumps(manifest, indent=2))
+        if chunk_recs is not None:
+            _prune_stale_chunks(os.path.join(path, "clients"),
+                                len(chunk_recs))
         tel.counter("ckpt_saves_total",
                     "fed checkpoints written").inc()
         tel.counter("ckpt_save_bytes_total",
                     "npz bytes written by fed checkpoint saves").inc(
-            os.path.getsize(npz_path))
+            os.path.getsize(npz_path) + chunk_bytes)
         if injector is not None:
             injector.fire("ckpt_written", path=npz_path)
+
+
+def _prune_stale_chunks(chunk_dir: str, n_live: int) -> None:
+    """Best-effort removal of chunk files beyond the committed count —
+    left behind when a checkpoint is overwritten in place by a save with
+    fewer clients (the loader only reads manifest-listed files, so this
+    is hygiene, not correctness)."""
+    try:
+        names = os.listdir(chunk_dir)
+    except OSError:
+        return
+    for name in names:
+        if not (name.startswith("client-") and name.endswith(".npz")):
+            continue
+        try:
+            idx = int(name[len("client-"):-len(".npz")])
+        except ValueError:
+            continue
+        if idx >= n_live:
+            try:
+                os.unlink(os.path.join(chunk_dir, name))
+            except OSError:
+                pass
 
 
 def load_fed_checkpoint(path: str, verify: bool = True, telemetry=None):
@@ -347,7 +406,8 @@ def load_fed_checkpoint(path: str, verify: bool = True, telemetry=None):
         try:
             manifest = _read_manifest(
                 os.path.join(path, "fed_manifest.json"))
-            if manifest.get("format") != "fed-checkpoint-v1":
+            if manifest.get("format") not in ("fed-checkpoint-v1",
+                                              "fed-checkpoint-v2"):
                 raise CorruptCheckpointError(
                     f"not a fed checkpoint: {path!r} "
                     f"({manifest.get('format')!r})")
@@ -355,6 +415,29 @@ def load_fed_checkpoint(path: str, verify: bool = True, telemetry=None):
                 _verify_npz(npz_path, manifest)
             arrays = _decode_arrays(_read_npz(npz_path),
                                     manifest.get("array_dtypes"))
+            clients = None
+            if manifest.get("format") == "fed-checkpoint-v2":
+                # chunked fleet (bank-scale): one npz per client,
+                # checksummed individually, streamed back one at a time
+                clients = []
+                for rec in manifest["client_chunks"]:
+                    fpath = os.path.join(path, rec["file"])
+                    if verify:
+                        try:
+                            got = _sha256_file(fpath)
+                        except OSError as e:
+                            raise CorruptCheckpointError(
+                                f"unreadable client chunk {fpath!r}: "
+                                f"{e}") from e
+                        if got != rec["sha256"]:
+                            raise CorruptCheckpointError(
+                                f"client chunk {fpath!r} fails its "
+                                f"manifest checksum: torn write or "
+                                f"bitrot — restore an older snapshot")
+                    c_arrays = _decode_arrays(_read_npz(fpath),
+                                              rec.get("array_dtypes"))
+                    clients.append(dejsonify_tree(rec["skeleton"],
+                                                  c_arrays))
         except CorruptCheckpointError:
             tel.counter("ckpt_checksum_failures_total",
                         "fed checkpoint loads rejected as corrupt "
@@ -364,6 +447,8 @@ def load_fed_checkpoint(path: str, verify: bool = True, telemetry=None):
                              for k, v in arrays.items()
                              if k.startswith("params/")})
         state = dejsonify_tree(manifest["state"], arrays)
+        if clients is not None:
+            state["clients"] = clients
         history = (dejsonify_tree(manifest["history"], arrays)
                    if manifest["history"] is not None else None)
         tel.counter("ckpt_loads_total",

@@ -1,0 +1,379 @@
+"""Tiered client store + double-buffered cohort prefetch.
+
+The RoundEngine's capacity slots hold client data *on device* — which
+caps the fleet at device memory and makes every arrival a synchronous
+host->device stall at a span boundary.  This module upgrades the slots
+into a managed hot cache over a host-side tier:
+
+  * ClientBank — the fleet's home: every client's per-sample buffers
+    live host-side as pre-padded ``(Nmax, *spec.shape)`` numpy rows
+    keyed by client id, optionally spilling least-recently-used entries
+    to per-client ``.npz`` files under ``spill_dir`` when a
+    ``ram_budget_bytes`` is set.  Registration is idempotent and the
+    store is lock-protected, so the staging thread and the scheduler's
+    event loop can touch it concurrently.  Fleet size is now bounded by
+    host RAM (or disk), not device memory.
+
+  * CohortStager — the double buffer: while span k runs on device, the
+    coalesced Arrival/rejoin cohort for the next event boundary is
+    gathered from the bank on a staging thread, stacked into one
+    pow2-padded buffer and moved with ``jax.device_put``
+    (RoundEngine.put_burst).  At the boundary the scheduler pays only a
+    fused gather+scatter (RoundEngine.commit_burst) — the transfer
+    overlapped compute instead of serializing with it.
+
+Staged cohorts carry *data rows only*: a slot's ``n`` and trace-CDF row
+are written synchronously at commit time from the live Client object, so
+a TraceShift landing between staging and commit can never publish a
+stale availability law.  Cohort rows are keyed by ``id(client)`` — the
+stager pins the staged Client objects, and FedState registers arrival
+payloads by reference, so the key is stable from prefetch to admit.
+
+Correctness is unchanged by construction: the bytes that reach a slot
+are the same pre-padded rows the synchronous path would stage, only
+earlier — bank-backed runs are bit-identical to device-resident runs of
+the same schedule (tests/test_bank.py pins this on the scenario
+library).
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def pad_rows(task, nmax: int, client) -> Dict[str, np.ndarray]:
+    """Zero-padded (Nmax, *spec.shape) host rows for every task buffer —
+    the exact bytes RoundEngine stages into a slot (shape-checked
+    against the task's buffer specs)."""
+    if client.n > nmax:
+        raise ValueError(
+            f"client has {client.n} samples > bank row capacity {nmax}; "
+            f"build the engine/bank with max_samples >= {client.n}")
+    rows = {}
+    for name, arr in task.client_arrays(client).items():
+        spec = task.buffers[name]
+        if arr.shape != (client.n,) + spec.shape:
+            raise ValueError(
+                f"feature shape {arr.shape[1:]} != bank feature shape "
+                f"{spec.shape} (buffer {name!r})")
+        row = np.zeros((nmax,) + spec.shape, spec.dtype)
+        row[:client.n] = arr
+        rows[name] = row
+    return rows
+
+
+class ClientBank:
+    """Host-RAM (optionally disk-spillable) store of pre-padded client
+    rows, keyed by client id.
+
+    Every row dict has identical geometry (the engine's buffer specs
+    padded to Nmax), so memory accounting is exact: ``row_nbytes`` per
+    resident client.  With ``ram_budget_bytes`` set (requires
+    ``spill_dir``), least-recently-used entries spill to per-client
+    ``client-<id>.npz`` files and transparently reload on access.
+    """
+
+    def __init__(self, task, nmax: int, *,
+                 spill_dir: Optional[str] = None,
+                 ram_budget_bytes: Optional[int] = None):
+        self.task = task
+        self.nmax = nmax
+        self.spill_dir = spill_dir
+        if ram_budget_bytes is not None and spill_dir is None:
+            raise ValueError("ram_budget_bytes needs spill_dir= to have "
+                             "somewhere to evict to")
+        self.ram_budget_bytes = ram_budget_bytes
+        self.row_nbytes = sum(
+            int(np.prod((nmax,) + spec.shape)) * np.dtype(spec.dtype).itemsize
+            for spec in task.buffers.values())
+        self._resident: "OrderedDict[int, Dict[str, np.ndarray]]" = \
+            OrderedDict()
+        self._spilled: Dict[int, str] = {}
+        self._lock = threading.RLock()
+        self.puts = 0
+        self.loads = 0
+        self.spills = 0
+
+    def __contains__(self, cid: int) -> bool:
+        with self._lock:
+            return cid in self._resident or cid in self._spilled
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._resident) + len(self._spilled)
+
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return len(self._resident) * self.row_nbytes
+
+    def put(self, cid: int, client,
+            rows: Optional[Dict[str, np.ndarray]] = None) -> bool:
+        """Register a client's rows (idempotent — an id already banked is
+        a cheap no-op).  ``rows=`` accepts pre-padded rows (e.g. a staged
+        cohort's host stack) to skip re-padding."""
+        with self._lock:
+            if cid in self._resident:
+                self._resident.move_to_end(cid)
+                return False
+            if cid in self._spilled:
+                return False
+            if rows is None:
+                rows = pad_rows(self.task, self.nmax, client)
+            self._resident[cid] = rows
+            self.puts += 1
+            self._enforce_budget(keep=cid)
+            return True
+
+    def rows(self, cid: int) -> Dict[str, np.ndarray]:
+        """The client's pre-padded rows, reloading from spill if needed
+        (marks the entry most-recently-used)."""
+        with self._lock:
+            if cid in self._resident:
+                self._resident.move_to_end(cid)
+                return self._resident[cid]
+            path = self._spilled.get(cid)
+            if path is None:
+                raise KeyError(f"client {cid} not in bank")
+            with np.load(path) as z:
+                rows = {name: z[name] for name in z.files}
+            del self._spilled[cid]
+            self._resident[cid] = rows
+            self.loads += 1
+            self._enforce_budget(keep=cid)
+            return rows
+
+    def drop(self, cid: int) -> None:
+        with self._lock:
+            self._resident.pop(cid, None)
+            path = self._spilled.pop(cid, None)
+        if path is not None:
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+
+    def _enforce_budget(self, keep: Optional[int] = None) -> None:
+        # caller holds the lock
+        if self.ram_budget_bytes is None:
+            return
+        while (len(self._resident) * self.row_nbytes > self.ram_budget_bytes
+               and len(self._resident) > 1):
+            cid = next(iter(self._resident))
+            if cid == keep:
+                # the entry being protected is LRU-first (fresh put into
+                # an over-budget bank): spill the next-oldest instead
+                cids = iter(self._resident)
+                next(cids)
+                try:
+                    cid = next(cids)
+                except StopIteration:
+                    return
+            self._spill_one(cid)
+
+    def _spill_one(self, cid: int) -> None:
+        rows = self._resident.pop(cid)
+        os.makedirs(self.spill_dir, exist_ok=True)
+        path = os.path.join(self.spill_dir, f"client-{cid:08d}.npz")
+        np.savez(path, **rows)
+        self._spilled[cid] = path
+        self.spills += 1
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"clients": len(self._resident) + len(self._spilled),
+                    "resident": len(self._resident),
+                    "spilled": len(self._spilled),
+                    "resident_bytes": len(self._resident) * self.row_nbytes,
+                    "row_nbytes": self.row_nbytes,
+                    "puts": self.puts, "loads": self.loads,
+                    "spills": self.spills}
+
+
+@dataclass
+class StagedCohort:
+    """One prefetched arrival cohort: pow2-padded device stacks plus the
+    row index of each staged client (keyed by ``id(client)`` — the
+    ``clients`` list pins those ids for the cohort's lifetime).
+    ``rows`` keeps the per-client HOST rows so the boundary can bank a
+    fresh arrival without re-padding it on the span loop's thread."""
+    clients: List
+    index: Dict[int, int]
+    dev: Dict[str, "object"]
+    rows: List[Dict[str, np.ndarray]]
+    k: int
+    stage_seconds: float
+
+
+class CohortStager:
+    """Stages upcoming arrival cohorts on a background worker thread.
+
+    ``submit()`` hands the cohort to a persistent daemon worker that
+    gathers rows (from the bank when the client is registered, padding
+    fresh payloads otherwise), stacks them pow2-padded, and ships them
+    with RoundEngine.put_burst — all while the current span computes.
+    ``collect()`` waits for the staging to finish (recording how long
+    the boundary actually waited) and hands the cohort to the scheduler
+    exactly once.  A new submit supersedes an uncollected one.  Staging
+    errors are swallowed into ``stage_errors`` and surface as an
+    ordinary prefetch miss — the synchronous admit path remains the
+    fallback for correctness.
+
+    The worker exits after ``IDLE_TIMEOUT_S`` without work and is
+    respawned on the next submit, so schedulers that are built in bulk
+    and abandoned without ``close()`` (fuzz corpora) don't accumulate
+    parked threads, while a hot span loop never pays thread spawn at a
+    boundary.
+    """
+
+    IDLE_TIMEOUT_S = 5.0
+
+    def __init__(self, engine, bank: Optional[ClientBank] = None):
+        self._engine = engine
+        self._bank = bank
+        self._cv = threading.Condition()
+        self._work: Optional[Tuple[list, dict]] = None   # (items, box)
+        self._pending: Optional[dict] = None             # box
+        self._worker: Optional[threading.Thread] = None
+        self._closed = False
+        self.cohorts_staged = 0
+        self.rows_staged = 0
+        self.stage_seconds_total = 0.0
+        self.wait_seconds_total = 0.0
+        self.superseded = 0
+        self.stage_errors = 0
+
+    def submit(self, items: Sequence[Tuple[Optional[int], object]]) -> None:
+        """items: (client_id or None, Client) pairs — ids register into
+        the bank on the staging thread; fresh payloads (unregistered
+        arrivals) are padded directly."""
+        items = list(items)
+        if not items:
+            return
+        box: dict = {"cohort": None, "err": None,
+                     "done": threading.Event()}
+        with self._cv:
+            if self._pending is not None:
+                # superseded: the event set for the boundary changed
+                self._pending = None
+                self.superseded += 1
+            self._work = (items, box)
+            self._pending = box
+            self._closed = False
+            if self._worker is None or not self._worker.is_alive():
+                self._worker = threading.Thread(
+                    target=self._worker_loop, name="fed-cohort-stager",
+                    daemon=True)
+                self._worker.start()
+            self._cv.notify_all()
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cv:
+                deadline = time.monotonic() + self.IDLE_TIMEOUT_S
+                while self._work is None and not self._closed:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0.0 or not self._cv.wait(remaining):
+                        if self._work is None:
+                            return        # idle timeout: park
+                if self._work is None:    # closed with nothing queued
+                    return
+                work, self._work = self._work, None
+            self._stage(*work)
+
+    def _stage(self, items, box) -> None:
+        import jax
+
+        try:
+            t0 = time.perf_counter()
+            clients, rows_list = [], []
+            for cid, c in items:
+                if self._bank is not None and cid is not None:
+                    self._bank.put(cid, c)
+                    rows_list.append(self._bank.rows(cid))
+                else:
+                    rows_list.append(pad_rows(self._engine.task,
+                                              self._engine.nmax, c))
+                clients.append(c)
+            k = len(clients)
+            kp = _pow2(k)
+            stacks = {
+                name: np.stack([r[name] for r in rows_list]
+                               + [rows_list[-1][name]] * (kp - k))
+                for name in self._engine.task.buffers}
+            dev = self._engine.put_burst(stacks)
+            # force the transfers here, on the staging thread — the whole
+            # point is that collect() at the boundary finds them done
+            jax.block_until_ready(list(dev.values()))
+            box["cohort"] = StagedCohort(
+                clients=clients,
+                index={id(c): j for j, c in enumerate(clients)},
+                dev=dev, rows=rows_list, k=k,
+                stage_seconds=time.perf_counter() - t0)
+        except Exception as e:        # pragma: no cover - defensive
+            box["err"] = e
+        finally:
+            box["done"].set()
+
+    def collect(self) -> Optional[StagedCohort]:
+        """The staged cohort for this boundary, or None (nothing
+        submitted / staging failed).  Consumes the cohort."""
+        with self._cv:
+            box, self._pending = self._pending, None
+        if box is None:
+            return None
+        t0 = time.perf_counter()
+        box["done"].wait()
+        self.wait_seconds_total += time.perf_counter() - t0
+        if box["err"] is not None:
+            self.stage_errors += 1
+            return None
+        cohort = box["cohort"]
+        self.cohorts_staged += 1
+        self.rows_staged += cohort.k
+        self.stage_seconds_total += cohort.stage_seconds
+        return cohort
+
+    def close(self) -> None:
+        """Drop any in-flight staging work and retire the worker (so no
+        stray device_put outlives the scheduler).  Idempotent; a later
+        submit() simply respawns the worker."""
+        with self._cv:
+            box, self._pending = self._pending, None
+            work, self._work = self._work, None
+            self._closed = True
+            worker, self._worker = self._worker, None
+            self._cv.notify_all()
+        if work is not None:
+            work[1]["done"].set()         # never picked up: unblock waiters
+        if box is not None:
+            box["done"].wait()
+        if worker is not None and worker.is_alive():
+            worker.join(timeout=self.IDLE_TIMEOUT_S + 1.0)
+
+    def overlap_fraction(self) -> float:
+        """Fraction of staging wall time hidden behind span compute:
+        1 - wait/stage (1.0 = boundaries never waited)."""
+        if self.stage_seconds_total <= 0.0:
+            return 0.0
+        return max(0.0, 1.0 - self.wait_seconds_total
+                   / self.stage_seconds_total)
+
+    def stats(self) -> dict:
+        return {"cohorts_staged": self.cohorts_staged,
+                "rows_staged": self.rows_staged,
+                "stage_seconds_total": self.stage_seconds_total,
+                "wait_seconds_total": self.wait_seconds_total,
+                "overlap_fraction": self.overlap_fraction(),
+                "superseded": self.superseded,
+                "stage_errors": self.stage_errors}
+
+
+def _pow2(k: int) -> int:
+    return 1 << (k - 1).bit_length() if k > 1 else 1

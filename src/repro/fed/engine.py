@@ -57,7 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import scheme_coefficients
-from repro.core.compression import resolve_compression
+from repro.core.compression import resolve_compression, wire_bytes
 from repro.core.fed_step import fed_round_parallel, fed_round_sequential
 from repro.fed.task import ArrayTask
 from repro.obs.telemetry import resolve as resolve_telemetry
@@ -171,6 +171,19 @@ def _slot_write(buf, row, slot):
 _slot_write = jax.jit(_slot_write)
 
 
+def _evict_write(n_buf, cdf_buf, cdf_row, slot):
+    """Both evict writes (n -> 1, s-law -> empty-slot atom) in one
+    dispatch — separate _slot_writes are a host dispatch each on the
+    churn boundary path."""
+    return (jax.lax.dynamic_update_index_in_dim(
+                n_buf, jnp.int32(1), slot, axis=0),
+            jax.lax.dynamic_update_index_in_dim(
+                cdf_buf, cdf_row, slot, axis=0))
+
+
+_evict_write = jax.jit(_evict_write)
+
+
 @functools.lru_cache(maxsize=64)
 def _slots_writer(sharding):
     """Jitted burst scatter (admit_many), pinned to the buffer's own
@@ -193,6 +206,47 @@ def _pow2_pad(k: int) -> int:
     """Next power of two >= k: bursts of any size reuse at most
     log2(capacity)+1 compiled scatter shapes per buffer."""
     return 1 << (k - 1).bit_length() if k > 1 else 1
+
+
+def _dev(x, dtype):
+    """jnp.asarray(x, dtype) that short-circuits for device arrays
+    already in dtype — the common span-args case."""
+    if isinstance(x, jax.Array) and x.dtype == dtype:
+        return x
+    return jnp.asarray(x, dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def _burst_writer(data_shardings, n_sharding, cdf_sharding):
+    """ONE jitted dispatch updating every client buffer plus the n and
+    s-CDF columns of an admit burst — the previous per-buffer scatters
+    cost 3+ dispatches per burst and measured *slower* per row than
+    single admits at small k.  Data rows go through a gather
+    ``rows[idx]`` first, so a prefetched cohort stack can be committed
+    partially / reordered (idx maps each written slot to its staged
+    row); duplicate slots carry identical rows (pow2 padding repeats
+    the last entry), so scatter order cannot matter.  Under mesh
+    sharding, out_shardings pin each buffer's own sharding — without
+    them the scatter result can come back replicated and silently
+    re-layout the compiled span fns (one recompile per churn event).
+    Single-device callers pass sharding None: out_shardings would mint
+    *committed* outputs where the engine's buffers start uncommitted,
+    and that committed-ness flip shows up as new C++ fastpath cache
+    entries on every span fn (the churn contract pins those flat).
+    Cached per sharding tuple; shape variants retrace under the same
+    jit (bounded: pow2 burst x pow2 stack sizes)."""
+
+    def write(data_bufs, data_rows, n_buf, n_rows, cdf_buf, cdf_rows,
+              idx, slots):
+        out = {name: buf.at[slots].set(data_rows[name][idx])
+               for name, buf in data_bufs.items()}
+        return out, n_buf.at[slots].set(n_rows), \
+            cdf_buf.at[slots].set(cdf_rows)
+
+    if n_sharding is None:
+        return jax.jit(write)
+    out_sh = (dict(data_shardings), n_sharding, cdf_sharding)
+    return jax.jit(write, out_shardings=out_sh)
 
 
 class RoundEngine:
@@ -336,6 +390,7 @@ class RoundEngine:
         self.n = self._put_slots(n_arr)
         self.s_cdf = self._put_slots(cdf)
         self._fns = {}
+        self._empty_cdf_row = None    # lazy device copy (see evict)
         self.trace_count = 0      # bumped at chunk trace time (see _get_fn)
         self._pspecs = None
         self._pspecs_built = False
@@ -350,6 +405,14 @@ class RoundEngine:
             "engine_spans_total", "run_span dispatches")
         self._m_rounds = tel.counter(
             "engine_rounds_total", "rounds executed by run_span")
+        # analytic client->server traffic (core/compression.wire_bytes),
+        # labeled by wire format — incremented per span from the realized
+        # participation counts
+        self._m_wire = tel.counter(
+            "fed_wire_bytes_total",
+            "client->server delta bytes (analytic, by wire format)",
+            labelnames=("wire",))
+        self._d_total: Optional[int] = None
 
     def _client_rows(self, client):
         """The task's per-sample arrays for one client, shape-checked
@@ -409,22 +472,15 @@ class RoundEngine:
 
     # -- capacity-slot lifecycle ----------------------------------------------
     def admit(self, slot: int, client) -> None:
-        """Stage a client's data/size/trace-CDF into an engine slot: one
-        host->device transfer + dynamic-update-slice per buffer.  The
+        """Stage a client's data/size/trace-CDF into an engine slot.  The
         client may be brand new (constructed after engine build) — shapes
-        are static, so no compiled span scan is invalidated."""
+        are static, so no compiled span scan is invalidated.  Lands via
+        the same fused multi-buffer write as admit_many (a k=1 burst):
+        one transfer per buffer, one device dispatch total."""
         if not 0 <= slot < self.capacity:
             raise IndexError(f"slot {slot} out of range [0, {self.capacity})")
         with self.telemetry.span("engine.admit", slot=slot):
-            rows = self._staged_rows(client)
-            s = jnp.int32(slot)
-            for name, row in rows.items():
-                self.data[name] = _slot_write(self.data[name],
-                                              self._put_row(row), s)
-            self.n = _slot_write(self.n, jnp.int32(client.n), s)
-            self.s_cdf = _slot_write(
-                self.s_cdf,
-                self._put_row(trace_cdf_row(client.trace, self.E)), s)
+            self._admit_many([(slot, client)])
 
     def _staged_rows(self, client):
         """Zero-padded (Nmax, *spec.shape) rows for every task buffer."""
@@ -442,27 +498,25 @@ class RoundEngine:
         return rows
 
     def admit_many(self, assignments) -> None:
-        """Admit an arrival burst in one fused update per buffer.
+        """Admit an arrival burst in ONE fused device dispatch.
 
         assignments: sequence of (slot, client) pairs.  Per-client row
-        staging happens host-side as in admit(), but the whole burst goes
-        up as ONE stacked device_put + ONE jitted scatter per buffer
-        (``buf.at[slots].set(rows)``) instead of k separate transfers and
-        dynamic-update-slices — under sharding every transfer replicates
-        the rows to all devices, so coalescing cuts the dominant cost by
-        ~k.  Bursts are padded to a power-of-two length by repeating the
-        last (slot, row) pair, so at most log2(capacity)+1 scatter shapes
-        ever compile per buffer (the zero-recompile churn contract)."""
+        staging happens host-side as in admit(), then the whole burst —
+        every data buffer plus the n and s-CDF columns — goes up as one
+        stacked device_put per buffer and lands in a single jitted
+        multi-buffer scatter (_burst_writer) instead of 3+ transfers and
+        scatters; under sharding every transfer replicates the rows to
+        all devices, so coalescing cuts the dominant cost by ~k.  Bursts
+        are padded to a power-of-two length by repeating the last
+        (slot, row) pair, so at most log2(capacity)+1 scatter shapes
+        ever compile (the zero-recompile churn contract)."""
         assignments = list(assignments)
         if not assignments:
-            return
-        if len(assignments) == 1:
-            self.admit(*assignments[0])
             return
         with self.telemetry.span("engine.admit_many", k=len(assignments)):
             self._admit_many(assignments)
 
-    def _admit_many(self, assignments) -> None:
+    def _admit_many(self, assignments, rows_of=None) -> None:
         for slot, _ in assignments:
             if not 0 <= slot < self.capacity:
                 raise IndexError(
@@ -472,23 +526,72 @@ class RoundEngine:
             # duplicate-index scatter order is unspecified per buffer, so
             # one slot could mix two clients' rows across buffers
             raise ValueError(f"admit_many got duplicate slots: {dup}")
-        staged = [self._staged_rows(c) for _, c in assignments]
-        slots = [s for s, _ in assignments]
-        ns = [c.n for _, c in assignments]
-        cdfs = [trace_cdf_row(c.trace, self.E) for _, c in assignments]
+        rows_of = rows_of or self._staged_rows
+        staged = [rows_of(c) for _, c in assignments]
         k = len(assignments)
         pad = _pow2_pad(k) - k
-        slots = np.asarray(slots + [slots[-1]] * pad, np.int32)
-        ns = np.asarray(ns + [ns[-1]] * pad, np.int32)
-        cdf_rows = np.stack(cdfs + [cdfs[-1]] * pad)
-        sl = jax.device_put(slots)
-        for name in self.task.buffers:
-            rows = np.stack([st[name] for st in staged]
-                            + [staged[-1][name]] * pad)
-            self.data[name] = _slots_write(self.data[name],
-                                           self._put_row(rows), sl)
-        self.n = _slots_write(self.n, jax.device_put(ns), sl)
-        self.s_cdf = _slots_write(self.s_cdf, self._put_row(cdf_rows), sl)
+        stacks = {name: np.stack([st[name] for st in staged]
+                                 + [staged[-1][name]] * pad)
+                  for name in self.task.buffers}
+        self.commit_burst(
+            self.put_burst(stacks),
+            slots=[s for s, _ in assignments],
+            ns=[c.n for _, c in assignments],
+            cdfs=[trace_cdf_row(c.trace, self.E) for _, c in assignments])
+
+    # -- staged-cohort handoff (fed/bank.CohortStager) ------------------------
+    def put_burst(self, stacks) -> dict:
+        """Move pre-stacked (k, Nmax, *spec.shape) host buffers to device
+        (replicated under sharding).  Pure transfer, no engine mutation —
+        safe to call from a staging thread while a span runs.  All
+        buffers go up in ONE batched device_put — per-buffer puts cost
+        a host dispatch each."""
+        host = {name: np.ascontiguousarray(a) for name, a in stacks.items()}
+        if self.sharding is not None:
+            return jax.device_put(host, self.sharding.replicated())
+        return jax.device_put(host)
+
+    def commit_burst(self, dev_rows, *, slots, ns, cdfs, idx=None) -> None:
+        """Land a (possibly prefetched) burst: one fused jitted
+        gather+scatter across every data buffer plus n and s_cdf.
+
+        dev_rows: put_burst output — (K, Nmax, *spec.shape) device
+        stacks; slots/ns/cdfs: per-written-slot values in slot order;
+        idx: row index into dev_rows for each written slot (default
+        identity), so a staged cohort can be committed as a subset or
+        reordered.  n and the trace CDF always come from the *live*
+        client at commit time (the caller's ns/cdfs), never from the
+        staged stack — a TraceShift between staging and commit can't
+        publish a stale law."""
+        k = len(slots)
+        if k == 0:
+            return
+        if idx is None:
+            idx = list(range(k))
+        pad = _pow2_pad(k) - k
+        slots_h = np.asarray(list(slots) + [slots[-1]] * pad, np.int32)
+        idx_h = np.asarray(list(idx) + [idx[-1]] * pad, np.int32)
+        ns_h = np.asarray(list(ns) + [ns[-1]] * pad, np.int32)
+        cdf_h = np.stack(list(cdfs) + [cdfs[-1]] * pad)
+        if self.sharding is not None:
+            slots_a, idx_a, ns_a = (jax.device_put(a)
+                                    for a in (slots_h, idx_h, ns_h))
+            cdf_rows = self._put_row(cdf_h)
+        else:
+            # one batched transfer — four small puts cost four host
+            # dispatches on the boundary's critical path
+            slots_a, idx_a, ns_a, cdf_rows = jax.device_put(
+                (slots_h, idx_h, ns_h, cdf_h))
+        if self.sharding is not None:
+            writer = _burst_writer(
+                tuple(sorted((name, buf.sharding)
+                             for name, buf in self.data.items())),
+                self.n.sharding, self.s_cdf.sharding)
+        else:
+            writer = _burst_writer((), None, None)
+        self.data, self.n, self.s_cdf = writer(
+            self.data, dev_rows, self.n, ns_a, self.s_cdf, cdf_rows,
+            idx_a, slots_a)
 
     def evict(self, slot: int) -> None:
         """Free a slot: its s-law collapses to the empty-slot atom at 0
@@ -498,10 +601,12 @@ class RoundEngine:
         if not 0 <= slot < self.capacity:
             raise IndexError(f"slot {slot} out of range [0, {self.capacity})")
         with self.telemetry.span("engine.evict", slot=slot):
-            s = jnp.int32(slot)
-            self.n = _slot_write(self.n, jnp.int32(1), s)
-            self.s_cdf = _slot_write(
-                self.s_cdf, self._put_row(empty_slot_cdf(self.E)), s)
+            if self._empty_cdf_row is None:
+                # the empty-slot law is the same for every evict — put
+                # it once
+                self._empty_cdf_row = self._put_row(empty_slot_cdf(self.E))
+            self.n, self.s_cdf = _evict_write(
+                self.n, self.s_cdf, self._empty_cdf_row, np.int32(slot))
 
     def set_trace(self, slot: int, trace) -> None:
         """Swap the availability law of an occupied slot (TraceShift)."""
@@ -510,7 +615,7 @@ class RoundEngine:
         with self.telemetry.span("engine.set_trace", slot=slot):
             self.s_cdf = _slot_write(
                 self.s_cdf, self._put_row(trace_cdf_row(trace, self.E)),
-                jnp.int32(slot))
+                np.int32(slot))
 
     # -- jitted chunk builders ------------------------------------------------
     def _round_core(self, params, data, alpha, idx, tau, p,
@@ -559,8 +664,11 @@ class RoundEngine:
         if cache_key in self._fns:
             return self._fns[cache_key]
 
+        # round indices are derived INSIDE the jit from the scalar span
+        # start (R is static per compiled chunk) — a host-side
+        # jnp.arange per chunk costs a dispatch on the boundary path
         if sampled:
-            def chunk(params, data, n, s_cdf, key, active, taus,
+            def chunk(params, data, n, s_cdf, key, active, tau0,
                       p, rb_tau0, rb_boost, lr_shift):
                 # trace-time side effect: the body runs only when jax
                 # (re)traces, so this counts actual compiles — the
@@ -569,6 +677,7 @@ class RoundEngine:
                 # _cache_size() over-reports)
                 self.trace_count += 1
                 self._m_traces.inc()
+                taus = tau0 + jnp.arange(R, dtype=jnp.int32)
 
                 def body(w, tau):
                     # per-round key: the draw for round tau is a pure
@@ -586,10 +695,11 @@ class RoundEngine:
                                             lr_shift)
                 return jax.lax.scan(body, params, taus)
         else:
-            def chunk(params, data, alphas, idxs, taus, p,
+            def chunk(params, data, alphas, idxs, tau0, p,
                       rb_tau0, rb_boost, lr_shift):
                 self.trace_count += 1
                 self._m_traces.inc()
+                taus = tau0 + jnp.arange(R, dtype=jnp.int32)
 
                 def body(w, xs):
                     alpha, idx, tau = xs
@@ -605,7 +715,7 @@ class RoundEngine:
     # -- host entry point -----------------------------------------------------
     def run_span(self, params, tau_start: int, n_rounds: int, *, p, active,
                  lr_shift_tau: int, reboot_tau0, reboot_boost,
-                 plan=None, key=None):
+                 plan=None, key=None, host_metrics: bool = True):
         """Run n_rounds starting at tau_start with fixed membership.
 
         plan: (alphas (R, C, E), idxs (R, C, E, B)) host-sampled arrays
@@ -613,7 +723,12 @@ class RoundEngine:
         on-device sampling.  Exactly one must be given.
 
         Returns (params, metrics) with metrics stacked over rounds:
-        s (R, C), eta (R,), delta_norm (R,).
+        s (R, C), eta (R,), delta_norm (R,).  With
+        ``host_metrics=False`` the metrics stay device-side as
+        per-chunk lists ({key: [chunk arrays]}) and wire accounting is
+        deferred — the caller converts later (``account_uploads``), so
+        the host never blocks on the span and dispatch of the *next*
+        span's boundary work overlaps this span's compute.
         """
         if (plan is None) == (key is None):
             raise ValueError("pass exactly one of plan= or key=")
@@ -622,11 +737,19 @@ class RoundEngine:
             return params, {"s": np.zeros((0, self.capacity), np.float32),
                             "eta": np.zeros(0, np.float32),
                             "delta_norm": np.zeros(0, np.float32)}
-        p = jnp.asarray(p, jnp.float32)
-        active = jnp.asarray(active, jnp.float32)
-        rb_tau0 = jnp.asarray(reboot_tau0, jnp.int32)
-        rb_boost = jnp.asarray(reboot_boost, jnp.float32)
-        lr_shift = jnp.int32(lr_shift_tau)
+        if self._d_total is None:
+            # model size in floats, cached before params may be donated
+            self._d_total = sum(
+                int(np.prod(np.shape(leaf)))
+                for leaf in jax.tree.leaves(params))
+        # no-op for args already device-resident in the right dtype
+        # (the StreamScheduler's cached span args) — an unconditional
+        # jnp.asarray costs ~60us of python per arg per span
+        p = _dev(p, jnp.float32)
+        active = _dev(active, jnp.float32)
+        rb_tau0 = _dev(reboot_tau0, jnp.int32)
+        rb_boost = _dev(reboot_boost, jnp.float32)
+        lr_shift = np.int32(lr_shift_tau)
         if plan is not None:
             alphas = jnp.asarray(plan[0], jnp.float32)
             idxs = jnp.asarray(plan[1], jnp.int32)
@@ -654,22 +777,37 @@ class RoundEngine:
         with tel.span("engine.run_span", tau=tau_start,
                       rounds=n_rounds), prof:
             for r in _pow2_chunks(n_rounds, self.chunk_size):
-                taus = jnp.arange(tau, tau + r, dtype=jnp.int32)
+                tau0 = np.int32(tau)     # round indices derive in-jit
                 if plan is not None:
                     fn = self._get_fn(r, sampled=False)
                     params, m = fn(params, self.data,
                                    alphas[off:off + r], idxs[off:off + r],
-                                   taus, p, rb_tau0, rb_boost, lr_shift)
+                                   tau0, p, rb_tau0, rb_boost, lr_shift)
                 else:
                     fn = self._get_fn(r, sampled=True)
                     # the base key passes through unchanged: per-round
                     # randomness folds tau inside the chunk body, so chunk
                     # splits never reuse (or re-shuffle) randomness
                     params, m = fn(params, self.data, self.n,
-                                   self.s_cdf, key, active, taus, p,
+                                   self.s_cdf, key, active, tau0, p,
                                    rb_tau0, rb_boost, lr_shift)
-                ms.append(jax.tree.map(np.asarray, m))
+                ms.append(jax.tree.map(np.asarray, m) if host_metrics
+                          else m)
                 off += r
                 tau += r
+        if not host_metrics:
+            return params, {k: [m[k] for m in ms] for k in ms[0]}
         metrics = {k: np.concatenate([m[k] for m in ms]) for k in ms[0]}
+        self.account_uploads(metrics["s"])
         return params, metrics
+
+    def account_uploads(self, s: np.ndarray) -> None:
+        """Charge fed_wire_bytes_total for a span's completed-epoch
+        matrix — one delta upload per client-round with any epochs
+        (run_span does this inline; deferred-metrics callers do it at
+        conversion time)."""
+        uploads = int((s > 0).sum())
+        if uploads:
+            self._m_wire.labels(self.compression.name).inc(
+                wire_bytes(self._d_total, self.compression,
+                           n_clients=uploads))

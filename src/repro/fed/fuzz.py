@@ -143,6 +143,11 @@ def generate_case(seed: int, *, n_founding: int = 4, capacity: int = 8,
     min_tau = {i: 0 for i in range(n_founding)}
     next_arrival = 0                           # index into arrival pool
     next_id = n_founding                       # id a new payload will get
+    last_fresh_tau = 0               # fresh-arrival taus NON-DECREASING:
+    # fresh payloads are registered in *application* order, so a later
+    # pool entry landing at an earlier tau would swap the ids this
+    # simulation hands to shifts/departures (clients[i] IndexError when
+    # a shift for the swapped id applies before its arrival)
     kills = 0
     excludes = 0
 
@@ -165,6 +170,8 @@ def generate_case(seed: int, *, n_founding: int = 4, capacity: int = 8,
             cursor += n
         elif kind == "arrival" and free > 0 \
                 and next_arrival < n_arrival_pool:
+            tau = max(tau, last_fresh_tau)
+            last_fresh_tau = tau
             push(Arrival(tau, client_id=-(next_arrival + 1)))
             # negative ids are pool references resolved at execution
             free -= 1
@@ -246,7 +253,8 @@ class FuzzHarness:
                  max_samples: int = 60, scheme: str = "C",
                  eta0: float = 1.0, data_seed: int = 0,
                  engine_mode: str = "client_parallel", sharding=None,
-                 compression=None):
+                 compression=None, bank: bool = False,
+                 prefetch: bool = False):
         from repro.configs.paper import SYNTHETIC_LR
         from repro.data import synthetic_federation
         from repro.fed.driver import Client
@@ -259,6 +267,8 @@ class FuzzHarness:
         self.scheme = scheme
         self.eta0 = eta0
         self.engine_mode = engine_mode
+        self.bank = bank
+        self.prefetch = prefetch
         cfg = SYNTHETIC_LR
         train, test = synthetic_federation(
             0.5, 0.5, n_founding + n_arrival_pool, seed=data_seed)
@@ -303,14 +313,16 @@ class FuzzHarness:
             return StreamScheduler(
                 clients=founders, init_params=self.init_params,
                 engine=eng, mode=mode, seed=case_seed, log_spans=True,
-                injector=injector)
+                injector=injector, bank=self.bank,
+                prefetch=self.prefetch)
         eng.admit_many(sorted(
             ((slot, state.clients[i])
              for i, slot in state.slot_of.items()),
             key=lambda sc: sc[0]))
         return StreamScheduler(
             init_params=jax.tree.map(jnp.asarray, params), engine=eng,
-            state=state, mode=mode, log_spans=True, injector=injector)
+            state=state, mode=mode, log_spans=True, injector=injector,
+            bank=self.bank, prefetch=self.prefetch)
 
     def materialize(self, case: FuzzCase) -> List[Tuple]:
         """Codec dicts -> fresh event objects; negative Arrival ids are
@@ -501,6 +513,7 @@ _BACKEND_SPECS = {
     "quantized": {"compression": "int8"},
     "quantized_sequential": {"engine_mode": "client_sequential",
                              "compression": "int8"},
+    "banked": {"bank": True, "prefetch": True},
 }
 
 
@@ -510,7 +523,9 @@ def make_backend_pool(backends=("client_parallel", "client_sequential"),
     and data: "client_parallel" (fused vmap + flat Pallas agg),
     "client_sequential" (streaming accumulate), "quantized" /
     "quantized_sequential" (the int8 compressed-delta wire format on
-    either layout), "sharded" (the client-axis sharded engine — pass
+    either layout), "banked" (the host-RAM client bank with
+    double-buffered cohort prefetch — must be bit-exact against
+    "client_parallel"), "sharded" (the client-axis sharded engine — pass
     sharding=, only meaningful under a multi-device mesh;
     tests/_fuzz_backends_check.py re-execs with 4 virtual devices)."""
     pool = {}

@@ -185,11 +185,52 @@ def correlated_churn(*, n_clients: int = 10, n_rounds: int = 30,
                           f"{burst_every} for {burst_len}")
 
 
+def rotation(*, fleet: int = 40, hot: int = 12, dwell: int = 2,
+             n_rounds: int = 60, seed: int = 0) -> Scenario:
+    """A fleet far larger than the hot-slot capacity rotates through the
+    engine: every ``dwell`` rounds the oldest resident departs (include
+    policy — its data mass stays in the objective, MIFA-style) and the
+    next fleet member arrives, first as a brand-new payload, then as a
+    client_id rejoin once everyone has been seen.  At most ``hot``
+    clients are resident at any time, so the scenario runs on ``hot``
+    capacity slots backed by the client bank — and, because slot
+    allocation is lowest-free-first, a run with capacity >= fleet
+    assigns the *same* slots, making the two bit-comparable
+    (tests/test_bank.py)."""
+    from collections import deque
+
+    all_clients = _make_clients(fleet, seed)
+    clients = all_clients[:hot]
+    events: List[ParticipationEvent] = []
+    resident = deque(range(hot))
+    departed_q: deque = deque()
+    # first-time arrivals get ids in application order: hot, hot+1, ...
+    next_new = hot
+    for tau in range(dwell, n_rounds, dwell):
+        old = resident.popleft()
+        events.append(Departure(tau, client_id=old, policy="include"))
+        departed_q.append(old)
+        if next_new < fleet:
+            events.append(Arrival(tau, client=all_clients[next_new]))
+            resident.append(next_new)
+            next_new += 1
+        else:
+            back = departed_q.popleft()
+            events.append(Arrival(tau, client_id=back))
+            resident.append(back)
+    nmax = max(c.n for c in all_clients)
+    return Scenario("rotation", clients, events, capacity=hot,
+                    n_rounds=n_rounds, seed=seed, max_samples=nmax,
+                    notes=f"fleet {fleet} through {hot} hot slots, "
+                          f"dwell {dwell}")
+
+
 SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "diurnal": diurnal,
     "flash-crowd": flash_crowd,
     "staggered": staggered_rollout,
     "churn": correlated_churn,
+    "rotation": rotation,
 }
 
 
@@ -206,8 +247,15 @@ def make_scenario(name: str, *, seed: int = 0, **kwargs) -> Scenario:
 def build_scheduler(sc: Scenario, *, mode: str = "device",
                     chunk_size: int = 16, agg: str = "auto",
                     interpret=None, compression=None,
-                    with_metrics: bool = False, telemetry=None):
-    """StreamScheduler for a scenario on the paper's SYNTHETIC logreg."""
+                    with_metrics: bool = False, telemetry=None,
+                    engine_mode: str = "client_parallel",
+                    capacity: Optional[int] = None,
+                    bank=None, prefetch: bool = False):
+    """StreamScheduler for a scenario on the paper's SYNTHETIC logreg.
+    ``bank=``/``prefetch=`` enable the tiered client store and the
+    double-buffered cohort prefetch (fed/bank.py); ``capacity=``
+    overrides the scenario's hot-slot count (fleet-beyond-capacity
+    runs keep the overflow in the bank)."""
     import jax
 
     from repro.configs.paper import SYNTHETIC_LR
@@ -218,12 +266,14 @@ def build_scheduler(sc: Scenario, *, mode: str = "device",
         clients=sc.clients, init_params=init_small(
             jax.random.PRNGKey(sc.seed), SYNTHETIC_LR),
         loss_fn=make_loss_fn(SYNTHETIC_LR), eval_fn=_paper_eval_fn(),
-        capacity=sc.capacity, max_samples=sc.max_samples,
+        capacity=capacity if capacity is not None else sc.capacity,
+        max_samples=sc.max_samples,
         local_epochs=sc.local_epochs, batch_size=sc.batch_size,
         scheme=sc.scheme, eta0=sc.eta0, chunk_size=chunk_size, agg=agg,
         interpret=interpret, compression=compression,
         with_metrics=with_metrics, seed=sc.seed,
-        mode=mode, events=sc.events, telemetry=telemetry)
+        mode=mode, events=sc.events, telemetry=telemetry,
+        engine_mode=engine_mode, bank=bank, prefetch=prefetch)
 
 
 def _paper_eval_fn():

@@ -339,6 +339,9 @@ class FederationService:
                     raise RuntimeError(
                         f"federation worker failed to stop within "
                         f"{timeout}s")
+            # the worker is down: retire the scheduler's prefetch
+            # staging thread too (idempotent; no-op without a bank)
+            self.scheduler.close()
         if self._error is not None:
             raise RuntimeError("federation worker died") from self._error
 
@@ -486,7 +489,8 @@ class FederationService:
                 "snapshot_failures": self.snapshot_failures,
                 "snapshots_kept": len(self._snapshots),
                 "journal_len": (len(self._journal)
-                                if self._journal is not None else 0)}
+                                if self._journal is not None else 0),
+                "prefetch": sch.prefetch_stats()}
 
     def chaos_report(self) -> dict:
         """Supervision outcome summary: one record per recovery (cause,
@@ -747,6 +751,11 @@ class FederationService:
             if old_worker is not None:
                 old_worker.join(timeout=self.join_timeout)
             joined = old_worker is None or not old_worker.is_alive()
+            if joined:
+                # drop the dead scheduler's in-flight staging work; the
+                # restored scheduler rebuilds its bank + hot set from
+                # the snapshot's clients (StreamScheduler.restore)
+                old_sch.close()
             tau_at_failure = int(old_sch._next_tau)
 
             if self._fail_streak >= self.max_restarts:

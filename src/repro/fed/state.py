@@ -28,6 +28,7 @@ Invariants:
 from __future__ import annotations
 
 import heapq
+from dataclasses import replace
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -242,7 +243,16 @@ class FedState:
 
         if isinstance(e, TraceShift):
             i = e.client_id
-            self.clients[i].trace = e.trace     # plan-mode draws follow
+            if not 0 <= i < len(self.clients):
+                return "", actions              # unknown device: no-op
+            # copy-on-shift, NOT in-place: the registered Client object
+            # is aliased by the payload Arrival that delivered it (and
+            # by any service journal holding that event for post-crash
+            # replay) — mutating .trace through the alias would make the
+            # replayed arrival re-register the *shifted* law and break
+            # bit-exact recovery.  Arrays are shared by reference; only
+            # the law changes.  Plan-mode draws follow the new object.
+            self.clients[i] = replace(self.clients[i], trace=e.trace)
             slot = self.slot_of.get(i)
             if slot is not None:
                 actions.append(("set_trace", slot, e.trace))
@@ -257,6 +267,34 @@ class FedState:
             return f"burst:{ids}@{e.duration};", actions
 
         raise TypeError(f"unknown participation event {e!r}")
+
+    def upcoming_arrivals(self, until_tau: int):
+        """Prefetch planning (read-only): the (client_id, Client) pairs
+        whose queued Arrivals with tau <= until_tau will stage data into
+        a slot when applied — fresh payloads (client_id None until
+        registration) and unslotted rejoins.  A currently-slotted client
+        is included when a Departure for it is also queued in the window
+        (evict + rejoin inside one boundary still re-admits).  The
+        scheduler hands this set to the CohortStager (fed/bank.py) so
+        the transfer overlaps the current span."""
+        departing = {e.client_id for t, _, e in self.queue
+                     if t <= until_tau and isinstance(e, Departure)}
+        out, seen = [], set()
+        for t, _, e in self.queue:
+            if t > until_tau or not isinstance(e, Arrival):
+                continue
+            if e.client is not None:
+                if id(e.client) not in seen:
+                    seen.add(id(e.client))
+                    out.append((None, e.client))
+            else:
+                i = e.client_id
+                if (i is not None and 0 <= i < len(self.clients)
+                        and i not in seen
+                        and (i not in self.slot_of or i in departing)):
+                    seen.add(i)
+                    out.append((i, self.clients[i]))
+        return out
 
     def expire(self, tau: int) -> bool:
         """Retire a burst expiry landing on tau; True when a masked

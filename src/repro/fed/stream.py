@@ -55,8 +55,9 @@ import numpy as np
 
 from repro.core.arrivals import RebootState
 from repro.core.departures import BoundTerms
+from repro.fed.bank import ClientBank, CohortStager
 from repro.fed.driver import Client, RoundRecord
-from repro.fed.engine import RoundEngine
+from repro.fed.engine import RoundEngine, trace_cdf_row
 # event types re-exported for compatibility (they lived here pre-PR-5)
 from repro.fed.events import (Arrival, Departure,  # noqa: F401
                               InactivityBurst, ParticipationEvent,
@@ -110,7 +111,7 @@ class StreamScheduler:
                  state: Optional[FedState] = None,
                  events: Sequence[ParticipationEvent] = (),
                  injector=None, log_spans: bool = False,
-                 telemetry=None):
+                 telemetry=None, bank=None, prefetch: bool = False):
         if mode not in ("device", "plan"):
             raise ValueError(f"mode must be device|plan, got {mode!r}")
         self.mode = mode
@@ -161,6 +162,32 @@ class StreamScheduler:
         self.state = state
         self.history: List[RoundRecord] = (history if history is not None
                                            else [])
+        # tiered client store (fed/bank.py): the fleet's host-side home —
+        # bank=True builds one from the engine geometry, or pass a
+        # configured ClientBank (spill_dir / ram budget); prefetch=True
+        # additionally overlaps arrival staging with span compute on a
+        # background thread (implies a bank)
+        if prefetch and bank is None:
+            bank = True
+        if bank:
+            self.bank = (bank if isinstance(bank, ClientBank)
+                         else ClientBank(engine.task, engine.nmax))
+            for i, c in enumerate(self.state.clients):
+                self.bank.put(i, c)
+        else:
+            self.bank = None
+        self._stager = (CohortStager(engine, self.bank)
+                        if prefetch else None)
+        self._prefetch_sig = None
+        self._staged = None          # retained cohort (spans boundaries)
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
+        self._m_prefetch_hits = self.telemetry.counter(
+            "sched_prefetch_hits_total",
+            "admits served from a prefetched cohort")
+        self._m_prefetch_miss = self.telemetry.counter(
+            "sched_prefetch_misses_total",
+            "admits that fell back to the synchronous staging path")
         self._span_args = None
         self._dirty = True
         self._eval_cache = None            # (objective_version, x, y)
@@ -221,8 +248,14 @@ class StreamScheduler:
     # -- queue ---------------------------------------------------------------
     def push(self, *events: ParticipationEvent) -> None:
         """Enqueue participation events (any order; any time — including
-        between run() calls, which is the streaming use case)."""
+        between run() calls, which is the streaming use case).  With the
+        tiered bank on, staging starts here — at ingestion — not at the
+        next span start: the boundary is the deadline, so the staging
+        thread should get the full span of lead time, not the sliver
+        between span dispatch and the boundary."""
         self.state.push(*events)
+        if self._stager is not None:
+            self._maybe_prefetch()
 
     @property
     def pending(self) -> int:
@@ -243,15 +276,17 @@ class StreamScheduler:
     def _apply_due_events(self, tau: int) -> str:
         st = self.state
         ev = ""
-        # an arrival burst coalesces into one fused admit_many: slot
+        # an arrival burst coalesces into one fused admit burst: slot
         # writes are deferred while consecutive admit actions accumulate,
         # and flushed before any action that may read or free a slot
         admits: List = []
 
         def flush():
             if admits:
-                self.engine.admit_many(admits)
-                admits.clear()
+                try:
+                    self._flush_admits(admits)
+                finally:
+                    admits.clear()
 
         try:
             while st.due(tau):
@@ -260,7 +295,7 @@ class StreamScheduler:
                 self.observer.observe_event(e, tau)
                 for act in actions:
                     if act[0] == "admit":
-                        admits.append((act[1], st.clients[act[2]]))
+                        admits.append((act[1], act[2]))
                     elif act[0] == "evict":
                         flush()
                         self.engine.evict(act[1])
@@ -279,6 +314,54 @@ class StreamScheduler:
         if ev:
             self._dirty = True
         return ev
+
+    def _flush_admits(self, admits: List[tuple]) -> None:
+        """Land a coalesced admit burst: admits is (slot, client_id)
+        pairs.  With a prefetched cohort covering some of the clients,
+        those slots commit from the already-on-device stack (one fused
+        gather+scatter); the rest take the synchronous admit_many path.
+        n and trace CDFs always come from the live Client at commit
+        time, so prefetched rows can never publish a stale law."""
+        st = self.state
+        pairs = [(slot, i, st.clients[i]) for slot, i in admits]
+        staged = self._staged
+        if self._stager is not None:
+            fresh = self._stager.collect()
+            if fresh is not None:
+                # retain: later boundaries commit their subset of the
+                # same stack without re-staging (rows are immutable)
+                staged = self._staged = fresh
+        if self.bank is not None:
+            # fresh arrivals enter the bank here (first time their
+            # client_id exists); a staged client's host rows ride along
+            # so the span loop's thread never re-pads them
+            for _, i, c in pairs:
+                j = staged.index.get(id(c)) if staged is not None else None
+                self.bank.put(i, c,
+                              rows=staged.rows[j] if j is not None
+                              else None)
+        hits, misses = [], []
+        for slot, _, c in pairs:
+            j = staged.index.get(id(c)) if staged is not None else None
+            if j is not None:
+                hits.append((slot, c, j))
+            else:
+                misses.append((slot, c))
+        if hits:
+            self.engine.commit_burst(
+                staged.dev,
+                slots=[slot for slot, _, _ in hits],
+                ns=[c.n for _, c, _ in hits],
+                cdfs=[trace_cdf_row(c.trace, self.engine.E)
+                      for _, c, _ in hits],
+                idx=[j for _, _, j in hits])
+            self.prefetch_hits += len(hits)
+            self._m_prefetch_hits.inc(len(hits))
+        if misses:
+            if self._stager is not None:
+                self.prefetch_misses += len(misses)
+                self._m_prefetch_miss.inc(len(misses))
+            self.engine.admit_many(misses)
 
     # -- evaluation -----------------------------------------------------------
     def _eval_arrays(self):
@@ -320,56 +403,146 @@ class StreamScheduler:
         start = st.next_tau
         stop = start + n_rounds
         tau = start
-        while tau < stop:
-            if self.injector is not None:
-                self.injector.fire("sched_span", tau=tau)
-            ev = self._apply_events(tau)
-            end = st.span_end(tau, stop, ev, eval_every)
-            R = end - tau
-            if self._span_args is None or self._dirty:
-                a = st.span_args(tau)
-                if self.span_log is not None:
-                    self.span_log.append((tau, a["p"].copy(),
-                                          a["active"].copy(),
-                                          a["lr_shift_tau"]))
-                self._span_args = dict(
-                    p=jnp.asarray(a["p"]),
-                    active=jnp.asarray(a["active"]),
-                    lr_shift_tau=a["lr_shift_tau"],
-                    reboot_tau0=jnp.asarray(a["reboot_tau0"]),
-                    reboot_boost=jnp.asarray(a["reboot_boost"]))
-                self._dirty = False
-            kwargs = self._span_args
-            with self.telemetry.span("sched.run_span", tau=tau, rounds=R):
-                if self.mode == "device":
-                    # the base key is never split: per-round randomness
-                    # folds the round index on device, so the sample
-                    # stream is invariant to span/chunk structure
-                    # (resume parity)
-                    self.params, m = eng.run_span(self.params, tau, R,
-                                                  key=st.key, **kwargs)
-                else:
-                    plans = [st.sample_plan(t, self.E, self.B)
-                             for t in range(tau, end)]
-                    alphas = np.stack([pl[0] for pl in plans])
-                    idxs = np.stack([pl[1] for pl in plans])
-                    self.params, m = eng.run_span(self.params, tau, R,
-                                                  plan=(alphas, idxs),
-                                                  **kwargs)
-            self._m_applied.inc()
-            self.observer.observe_span(st, tau, m, eng.scheme, self.E)
-            eval_last = (end - 1) % eval_every == 0 or (ev and R == 1)
+        # spans dispatch asynchronously: per-span metrics stay
+        # device-side (host_metrics=False) and materialize only after
+        # the loop, so the host races ahead applying events / staging
+        # cohorts / dispatching the next boundary while the device is
+        # still crunching earlier spans.  An evaluate() (which reads
+        # params) is the only in-loop sync point.
+        pending = []      # (tau, end, ev_label, device metrics, eval)
+        try:
+            while tau < stop:
+                if self.injector is not None:
+                    self.injector.fire("sched_span", tau=tau)
+                ev = self._apply_events(tau)
+                end = st.span_end(tau, stop, ev, eval_every)
+                R = end - tau
+                if self._stager is not None:
+                    # double buffer: while this span computes, the
+                    # staging thread assembles + ships the next event
+                    # boundary's arrival cohort from the bank
+                    self._maybe_prefetch()
+                if self._span_args is None or self._dirty:
+                    a = st.span_args(tau)
+                    if self.span_log is not None:
+                        self.span_log.append((tau, a["p"].copy(),
+                                              a["active"].copy(),
+                                              a["lr_shift_tau"]))
+                    # one batched transfer for the four membership
+                    # arrays (separate puts are a host dispatch each,
+                    # paid at every churn boundary)
+                    p_d, act_d, rb0_d, rbb_d = jax.device_put((
+                        np.asarray(a["p"], np.float32),
+                        np.asarray(a["active"], np.float32),
+                        np.asarray(a["reboot_tau0"], np.int32),
+                        np.asarray(a["reboot_boost"], np.float32)))
+                    self._span_args = dict(
+                        p=p_d, active=act_d,
+                        lr_shift_tau=a["lr_shift_tau"],
+                        reboot_tau0=rb0_d, reboot_boost=rbb_d)
+                    self._dirty = False
+                kwargs = self._span_args
+                with self.telemetry.span("sched.run_span", tau=tau,
+                                         rounds=R):
+                    if self.mode == "device":
+                        # the base key is never split: per-round
+                        # randomness folds the round index on device, so
+                        # the sample stream is invariant to span/chunk
+                        # structure (resume parity)
+                        self.params, m = eng.run_span(
+                            self.params, tau, R, key=st.key,
+                            host_metrics=False, **kwargs)
+                    else:
+                        plans = [st.sample_plan(t, self.E, self.B)
+                                 for t in range(tau, end)]
+                        alphas = np.stack([pl[0] for pl in plans])
+                        idxs = np.stack([pl[1] for pl in plans])
+                        self.params, m = eng.run_span(
+                            self.params, tau, R, plan=(alphas, idxs),
+                            host_metrics=False, **kwargs)
+                self._m_applied.inc()
+                eval_last = (end - 1) % eval_every == 0 or (ev and R == 1)
+                ev_result = self.evaluate() if eval_last else None
+                pending.append((tau, end, ev, m, ev_result))
+                tau = end
+            st.next_tau = stop
+        finally:
+            # materialize whatever completed, even if a mid-run fault
+            # unwound the loop — those spans did run
+            self._flush_spans(pending)
+        return self.history
+
+    def _flush_spans(self, pending) -> None:
+        """Convert deferred device-side span metrics to host records —
+        history rows, observer signals, and wire accounting, in span
+        order."""
+        eng = self.engine
+        # one batched transfer for every span's device metrics — a
+        # per-array np.asarray would pay a separate sync each (dozens of
+        # tiny readbacks per churned span run)
+        hosted = jax.device_get([m for _, _, _, m, _ in pending])
+        for (tau, end, ev, _, ev_result), m in zip(pending, hosted):
+            m = {k: np.concatenate(chunks) for k, chunks in m.items()}
+            eng.account_uploads(m["s"])
+            self.observer.observe_span(self.state, tau, m, eng.scheme,
+                                       self.E)
             for j, t in enumerate(range(tau, end)):
                 loss = acc = float("nan")
-                if eval_last and t == end - 1:
-                    loss, acc = self.evaluate()
+                if ev_result is not None and t == end - 1:
+                    loss, acc = ev_result
                 s = m["s"][j]
                 self.history.append(RoundRecord(
                     t, float(loss), float(acc), float(m["eta"][j]),
                     int((s > 0).sum()), s, ev if t == tau else ""))
-            tau = end
-        st.next_tau = stop
-        return self.history
+
+    def _maybe_prefetch(self) -> None:
+        """Submit the queued-arrival horizon as ONE staged cohort (not
+        one per boundary): every Arrival currently in the queue pads,
+        stacks and ships together, and successive boundaries commit
+        their own subset of the retained stack.  Safe because the staged
+        stack carries data rows only — n and the trace CDF are read from
+        the live Client at commit — so a row can't go stale between
+        boundaries.  Idempotent: skips when the retained cohort already
+        covers the horizon; a genuinely new arrival set supersedes the
+        in-flight staging work."""
+        st = self.state
+        if not st.queue:
+            self._staged = None                 # horizon drained
+            return
+        until = max(t for t, _, _ in st.queue)
+        items = st.upcoming_arrivals(until)
+        if not items:
+            return
+        staged = self._staged
+        if staged is not None and all(id(c) in staged.index
+                                      for _, c in items):
+            return
+        sig = tuple(sorted(id(c) for _, c in items))
+        if sig == self._prefetch_sig:
+            return
+        self._prefetch_sig = sig
+        self._stager.submit(items)
+
+    def close(self) -> None:
+        """Stop the prefetch staging thread (if any).  Idempotent; the
+        scheduler itself stays usable — the next prefetch would simply
+        restage.  FederationService calls this whenever it retires a
+        scheduler (stop / supervised recovery)."""
+        self._staged = None
+        if self._stager is not None:
+            self._stager.close()
+
+    def prefetch_stats(self) -> dict:
+        """Bank + stager counters for dashboards and benches (empty when
+        the tiered store is off)."""
+        out = {}
+        if self.bank is not None:
+            out["bank"] = self.bank.stats()
+        if self._stager is not None:
+            out["stager"] = self._stager.stats()
+            out["hits"] = self.prefetch_hits
+            out["misses"] = self.prefetch_misses
+        return out
 
     # -- checkpoint / resume ---------------------------------------------------
     def engine_config(self) -> dict:
@@ -382,17 +555,26 @@ class StreamScheduler:
                 "compression": eng.compression.name,
                 "with_metrics": eng.with_metrics,
                 "engine_mode": eng.mode, "capacity": eng.capacity,
-                "max_samples": eng.nmax, "mode": self.mode}
+                "max_samples": eng.nmax, "mode": self.mode,
+                "bank": self.bank is not None,
+                "prefetch": self._stager is not None}
 
-    def save(self, path: str, extra: Optional[dict] = None) -> None:
+    def save(self, path: str, extra: Optional[dict] = None,
+             client_chunks: Optional[bool] = None) -> None:
         """Persist params + FedState + history + engine config so a killed
-        run resumes round-for-round (checkpoint/io.save_fed_checkpoint)."""
+        run resumes round-for-round (checkpoint/io.save_fed_checkpoint).
+        Bank-backed schedulers default to the chunked fleet format
+        (fed-checkpoint-v2): one checksummed npz per client, streamed,
+        so a host-RAM-scale fleet never materializes twice."""
         from repro.checkpoint.io import save_fed_checkpoint
+        if client_chunks is None:
+            client_chunks = self.bank is not None
         save_fed_checkpoint(
             path, self.params, self.state.to_dict(),
             history=history_to_dict(self.history),
             config=self.engine_config(), extra=extra,
-            injector=self.injector, telemetry=self.telemetry)
+            injector=self.injector, telemetry=self.telemetry,
+            client_chunks=client_chunks)
 
     @classmethod
     def restore(cls, path: str, *, loss_fn: Optional[Callable] = None,
@@ -462,7 +644,11 @@ class StreamScheduler:
                   eval_fn=eval_fn, evaluate=evaluate,
                   history=history_from_dict(history),
                   injector=injector, log_spans=log_spans,
-                  telemetry=telemetry)
+                  telemetry=telemetry,
+                  # the bank rebuilds from the restored clients (its
+                  # contents are derivable state, never persisted raw)
+                  bank=cfg.get("bank", False),
+                  prefetch=cfg.get("prefetch", False))
         return sch
 
 

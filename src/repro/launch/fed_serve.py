@@ -132,6 +132,12 @@ def main(argv=None) -> dict:
                     help="client-delta wire format (default: none; with "
                          "--resume the checkpoint's own format unless "
                          "given explicitly)")
+    ap.add_argument("--bank", action="store_true",
+                    help="host-RAM client bank behind the slot registry "
+                         "(fed/bank.py)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="stage the next arrival cohort on-device while "
+                         "the current span runs (implies --bank)")
     ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
                     help="run supervised with a seeded FaultPlan injected "
                          "at every boundary; adds a 'chaos' block to the "
@@ -186,6 +192,10 @@ def main(argv=None) -> dict:
         overrides = {} if args.mode is None else {"mode": args.mode}
         if args.compress is not None:
             overrides["compression"] = args.compress
+        if args.bank:
+            overrides["bank"] = True
+        if args.prefetch:
+            overrides["prefetch"] = True
         sch = StreamScheduler.restore(
             args.resume, loss_fn=_make_loss(), eval_fn=_paper_eval_fn(),
             telemetry=telemetry, **overrides)
@@ -195,12 +205,14 @@ def main(argv=None) -> dict:
         sch = build_scheduler(
             _strip_events(sc), mode=args.mode or "device",
             chunk_size=args.chunk_size, compression=args.compress,
+            bank=args.bank or None, prefetch=args.prefetch,
             telemetry=telemetry)
         timed = load_trace(args.trace)
     else:
         sch = build_scheduler(
             _strip_events(sc), mode=args.mode or "device",
             chunk_size=args.chunk_size, compression=args.compress,
+            bank=args.bank or None, prefetch=args.prefetch,
             telemetry=telemetry)
         timed = [(j / args.events_per_sec, e) for j, e in
                  enumerate(sorted(sc.events, key=lambda e: e.tau))]

@@ -38,6 +38,15 @@ def main(argv=None) -> dict:
                     help="client-delta wire format (default: none; with "
                          "--restore the checkpoint's own format unless "
                          "given explicitly)")
+    ap.add_argument("--bank", action="store_true",
+                    help="keep the full fleet's payloads in a host-RAM "
+                         "client bank (fed/bank.py); capacity slots "
+                         "become a managed hot cache")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="double-buffered cohort prefetch: stage the "
+                         "next boundary's arrival cohort onto the "
+                         "device while the current span runs "
+                         "(implies --bank)")
     ap.add_argument("--json", default=None,
                     help="also write the summary to this path")
     ap.add_argument("--save-state", default=None, metavar="DIR",
@@ -74,6 +83,10 @@ def main(argv=None) -> dict:
         overrides = {} if args.mode is None else {"mode": args.mode}
         if args.compress is not None:
             overrides["compression"] = args.compress
+        if args.bank:
+            overrides["bank"] = True
+        if args.prefetch:
+            overrides["prefetch"] = True
         sch = StreamScheduler.restore(args.restore,
                                       loss_fn=make_loss_fn(SYNTHETIC_LR),
                                       eval_fn=_paper_eval_fn(),
@@ -95,6 +108,8 @@ def main(argv=None) -> dict:
                                     eval_every=args.eval_every,
                                     chunk_size=args.chunk_size,
                                     compression=args.compress,
+                                    bank=args.bank or None,
+                                    prefetch=args.prefetch,
                                     telemetry=telemetry)
         rounds_ran = summary["rounds"]
     wall = time.perf_counter() - t0
@@ -112,6 +127,8 @@ def main(argv=None) -> dict:
         if not args.quiet:
             print(f"# resumable checkpoint written to {args.save_state}")
     summary["compression"] = sch.engine.compression.name
+    if sch.bank is not None:
+        summary["bank"] = sch.prefetch_stats()
     summary["wall_s"] = round(wall, 3)
     # rounds run THIS invocation (a resumed history also holds the
     # pre-checkpoint rounds, which this wall clock never paid for)
@@ -120,6 +137,11 @@ def main(argv=None) -> dict:
     if not args.quiet:
         print(f"# scenario {sc.name} ({sc.notes}), seed {sc.seed}, "
               f"mode {sch.mode}, wire {sch.engine.compression.name}")
+        if sch.bank is not None:
+            ps = sch.prefetch_stats()
+            print(f"# bank: {ps['bank']['resident']} resident, "
+                  f"prefetch hits {ps.get('hits', 0)} "
+                  f"misses {ps.get('misses', 0)}")
         print("tau,loss,acc,eta,n_active,event")
         for h in sch.history:
             if h.event or not (h.loss != h.loss):   # event or evaluated

@@ -54,6 +54,14 @@ def _hist(snap: dict, name: str, labels: Optional[dict] = None):
     return 0, 0.0, None
 
 
+def _fmt_b(v: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if v < 1024 or unit == "GiB":
+            return f"{v:.0f}{unit}" if unit == "B" else f"{v:.1f}{unit}"
+        v /= 1024
+    return f"{v:.1f}GiB"
+
+
 def _fmt_s(v: Optional[float]) -> str:
     if v is None:
         return "-"
@@ -154,6 +162,19 @@ class FedTop:
                     f"V={_val(snap, 'fed_bound', {'term': 'V'}):.4g} "
                     f"gamma={_val(snap, 'fed_bound', {'term': 'gamma'}):.4g} "
                     f"value={_val(snap, 'fed_bound', {'term': 'value'}):.4g}")
+
+        fam = snap.get("fed_wire_bytes_total")
+        if fam and fam["samples"]:
+            per_wire = ", ".join(
+                f"{s['labels'].get('wire', '?')}={_fmt_b(s['value'])}"
+                for s in fam["samples"])
+            lines.append(f"wire       uplink {per_wire}")
+        hits = _val(snap, "sched_prefetch_hits_total")
+        misses = _val(snap, "sched_prefetch_misses_total")
+        if hits or misses:
+            lines.append(
+                f"prefetch   hits={hits:.0f} misses={misses:.0f}  "
+                f"({hits / (hits + misses):.0%} staged ahead)")
 
         recs = list(svc.recoveries)
         if st["supervised"] or recs:

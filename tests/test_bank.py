@@ -1,0 +1,380 @@
+"""Tiered client bank + double-buffered cohort prefetch (fed/bank.py).
+
+The acceptance-critical properties pinned here:
+
+  * the bank-backed scheduler (hot slots as cache, fleet host-side,
+    arrival cohorts staged on a thread while the span computes) is
+    BIT-identical to the plain device-resident scheduler on the
+    scenario library, in both engine modes;
+  * a fleet much larger than capacity runs end-to-end through the
+    rotation scenario with history bit-identical to an all-resident
+    run of the same schedule;
+  * prefetch churn never recompiles the span scans (trace_count) and
+    correctly covers the evicted-client-rejoins-at-the-same-boundary
+    corner;
+  * chunked (v2) federation checkpoints round-trip clients exactly and
+    reject corrupt chunks.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper import SYNTHETIC_LR
+from repro.core.participation import TRACES
+from repro.data import synthetic_federation
+from repro.fed import Arrival, Client, Departure, StreamScheduler
+from repro.fed.bank import ClientBank, CohortStager, pad_rows
+from repro.fed.scenarios import build_scheduler, make_scenario
+from repro.models.small import init_small, logits_small, make_loss_fn
+
+CFG = SYNTHETIC_LR
+
+
+def make_clients(n=8, seed=0, trace_idx=None):
+    train, test = synthetic_federation(0.5, 0.5, n, seed=seed)
+    rng = np.random.default_rng(seed)
+    return [Client(x=tr[0], y=tr[1],
+                   trace=TRACES[trace_idx if trace_idx is not None
+                                else rng.integers(0, 8)],
+                   x_test=te[0], y_test=te[1])
+            for tr, te in zip(train, test)]
+
+
+def make_scheduler(clients, *, capacity=None, mode="device", seed=0,
+                   chunk_size=4, events=(), **kw):
+    return StreamScheduler(
+        clients=clients, init_params=init_small(jax.random.PRNGKey(0), CFG),
+        loss_fn=make_loss_fn(CFG), capacity=capacity,
+        local_epochs=5, batch_size=6, scheme="C", eta0=1.0, seed=seed,
+        mode=mode, chunk_size=chunk_size, events=events, **kw)
+
+
+def assert_history_identical(h1, h2):
+    assert len(h1) == len(h2)
+    for r1, r2 in zip(h1, h2):
+        assert r1.tau == r2.tau and r1.event == r2.event
+        assert r1.eta == r2.eta and r1.n_active == r2.n_active
+        np.testing.assert_array_equal(np.asarray(r1.s), np.asarray(r2.s))
+        # non-eval rounds are NaN on both sides (NaN != NaN)
+        np.testing.assert_array_equal(np.asarray(r1.loss),
+                                      np.asarray(r2.loss))
+        np.testing.assert_array_equal(np.asarray(r1.acc),
+                                      np.asarray(r2.acc))
+
+
+def assert_params_bitwise(p1, p2):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- ClientBank unit behavior -------------------------------------------------
+
+def test_bank_put_rows_roundtrip_and_idempotence():
+    sch = make_scheduler(make_clients(3, seed=1), capacity=3)
+    bank = ClientBank(sch.engine.task, sch.engine.nmax)
+    c = sch.clients[0]
+    bank.put(0, c)
+    rows = bank.rows(0)
+    expect = pad_rows(sch.engine.task, sch.engine.nmax, c)
+    assert set(rows) == set(expect)
+    for name in rows:
+        np.testing.assert_array_equal(rows[name], expect[name])
+        assert rows[name].shape[0] == sch.engine.nmax
+    puts = bank.puts
+    bank.put(0, c)                       # idempotent: no re-pad
+    assert bank.puts == puts
+    st = bank.stats()
+    assert st["clients"] == 1 and st["resident"] == 1
+    assert st["row_nbytes"] > 0
+    assert st["resident_bytes"] == st["row_nbytes"]
+
+
+def test_bank_spills_lru_to_disk_and_reloads(tmp_path):
+    sch = make_scheduler(make_clients(4, seed=2), capacity=4)
+    bank = ClientBank(sch.engine.task, sch.engine.nmax,
+                      spill_dir=str(tmp_path),
+                      ram_budget_bytes=2 * ClientBank(
+                          sch.engine.task, sch.engine.nmax).row_nbytes)
+    for i, c in enumerate(sch.clients):
+        bank.put(i, c)
+    st = bank.stats()
+    assert st["clients"] == 4
+    assert st["resident"] <= 2 and st["spilled"] >= 2
+    assert bank.spills >= 2
+    assert list(tmp_path.glob("client-*.npz"))
+    # a spilled client reloads bit-exactly (and becomes resident again)
+    rows = bank.rows(0)
+    expect = pad_rows(sch.engine.task, sch.engine.nmax, sch.clients[0])
+    for name in expect:
+        np.testing.assert_array_equal(rows[name], expect[name])
+
+
+def test_bank_budget_requires_spill_dir():
+    """A RAM budget with nowhere to evict to would have to drop data —
+    refused at construction."""
+    sch = make_scheduler(make_clients(2, seed=3), capacity=2)
+    with pytest.raises(ValueError, match="spill_dir"):
+        ClientBank(sch.engine.task, sch.engine.nmax, ram_budget_bytes=1)
+
+
+# -- bit-identity vs the device-resident scheduler ----------------------------
+
+@pytest.mark.parametrize("scenario", ["flash-crowd", "diurnal"])
+@pytest.mark.parametrize("engine_mode",
+                         ["client_parallel", "client_sequential"])
+def test_bank_prefetch_bit_identical_to_resident(scenario, engine_mode):
+    """The tentpole invariant: routing admits through the bank and the
+    staging thread changes WHEN bytes move, never WHICH bytes — history
+    and params are bit-identical to the all-resident scheduler."""
+    rounds = 14
+    plain = build_scheduler(make_scenario(scenario, seed=0),
+                            engine_mode=engine_mode, chunk_size=4)
+    plain.run(rounds, eval_every=7)
+    banked = build_scheduler(make_scenario(scenario, seed=0),
+                             engine_mode=engine_mode, chunk_size=4,
+                             prefetch=True)
+    banked.run(rounds, eval_every=7)
+    banked.close()
+    assert_history_identical(plain.history, banked.history)
+    assert_params_bitwise(plain.params, banked.params)
+    ps = banked.prefetch_stats()
+    if scenario == "flash-crowd":         # its arrivals all prefetch
+        assert ps["hits"] > 0 and ps["misses"] == 0
+
+
+def test_fleet_beyond_capacity_bit_identical_to_all_resident():
+    """256-clients-through-12-slots in spirit, sized for CI: the
+    rotation scenario cycles a fleet through a small hot set
+    (evict-to-bank + rejoin-from-bank at every boundary), and its
+    history is bit-identical to the same schedule on an engine large
+    enough to hold everyone.  Plan-mode sampling draws per occupied
+    slot in slot order, so the trajectories are comparable across
+    capacities; the all-resident run's extra slots stay exactly zero."""
+    fleet, hot, rounds = 16, 6, 24
+    small = build_scheduler(
+        make_scenario("rotation", seed=0, fleet=fleet, hot=hot,
+                      dwell=2, n_rounds=rounds),
+        mode="plan", chunk_size=4, prefetch=True)
+    small.run(rounds, eval_every=8)
+    small.close()
+    big = build_scheduler(
+        make_scenario("rotation", seed=0, fleet=fleet, hot=hot,
+                      dwell=2, n_rounds=rounds),
+        mode="plan", chunk_size=4, capacity=fleet)
+    big.run(rounds, eval_every=8)
+
+    assert small.engine.capacity == hot < big.engine.capacity
+    assert len(small.clients) > hot       # fleet really exceeded the slots
+    assert small.prefetch_stats()["bank"]["clients"] == len(small.clients)
+    for r1, r2 in zip(small.history, big.history):
+        assert r1.tau == r2.tau and r1.event == r2.event
+        assert r1.eta == r2.eta and r1.n_active == r2.n_active
+        np.testing.assert_array_equal(np.asarray(r1.s),
+                                      np.asarray(r2.s)[:hot])
+        assert not np.asarray(r2.s)[hot:].any()
+        np.testing.assert_array_equal(np.asarray(r1.loss),
+                                      np.asarray(r2.loss))
+    assert_params_bitwise(small.params, big.params)
+
+
+# -- zero-recompile + staged-cohort corners -----------------------------------
+
+def test_prefetch_churn_never_recompiles():
+    """Across sustained evict+rejoin churn with prefetch on, the span
+    scans compile exactly once per span length: RoundEngine.trace_count
+    and the per-chunk compilation caches are flat after warmup."""
+    fleet, hot = 10, 4
+    sch = build_scheduler(
+        make_scenario("rotation", seed=1, fleet=fleet, hot=hot,
+                      dwell=2, n_rounds=48),
+        chunk_size=4, prefetch=True)
+    sch.eval_fn = None                    # eval-set growth is not churn
+    sch.run(16, eval_every=10 ** 9)       # warmup: all span lengths seen
+    engine = sch.engine
+    traces = engine.trace_count
+    fns = dict(engine._fns)
+    sizes = {k: f._cache_size() for k, f in fns.items()}
+    sch.run(24, eval_every=10 ** 9)       # 12 more churn boundaries
+    sch.close()
+    assert sch.engine is engine
+    assert engine.trace_count == traces
+    assert set(engine._fns) == set(fns)
+    for k, f in fns.items():
+        assert f._cache_size() == sizes[k], f"chunk {k} recompiled"
+    assert sch.prefetch_stats()["misses"] == 0
+
+
+def test_evicted_client_rejoins_within_staged_cohort():
+    """The staging corner: a Departure and an Arrival for the SAME
+    client coalesce at one boundary.  upcoming_arrivals must stage the
+    still-slotted client (it has a queued departure), the boundary
+    evicts then re-admits from the staged cohort, and the trajectory
+    matches the unprefetched run bit-for-bit."""
+    def build(prefetch):
+        return make_scheduler(
+            make_clients(3, seed=8, trace_idx=0), capacity=3,
+            max_samples=600, prefetch=prefetch,
+            events=[Departure(4, client_id=0, policy="include"),
+                    Arrival(4, client_id=0)])
+
+    plain = build(False)
+    plain.run(8, eval_every=8)
+    sch = build(True)
+    sch.run(8, eval_every=8)
+    sch.close()
+    assert sch.prefetch_stats()["hits"] == 1
+    assert sch.prefetch_stats()["misses"] == 0
+    assert 0 in sch.slot_of               # re-admitted at the boundary
+    for h in sch.history:                 # cpu_0: s = E surely throughout
+        assert h.s[sch.slot_of[0]] == 5.0
+    assert_history_identical(plain.history, sch.history)
+    assert_params_bitwise(plain.params, sch.params)
+
+
+def test_trace_shift_after_staging_is_not_stale():
+    """Staged cohorts carry data rows only — n and the trace CDF are
+    computed from the live Client at commit.  A TraceShift landing
+    between staging and the boundary must therefore win."""
+    sch = make_scheduler(make_clients(2, seed=9, trace_idx=4),
+                         capacity=3, max_samples=600, prefetch=True)
+    new_cl = make_clients(1, seed=10, trace_idx=4)[0]   # cpu_90
+    sch.push(Arrival(4, client=new_cl))
+    sch.run(2, eval_every=10 ** 9)
+    # the cohort for tau=4 is already staged (or staging); now the
+    # client's availability law changes before the boundary
+    stager = sch._stager
+    for _ in range(200):
+        if stager._pending is not None:
+            break
+        sch.run(1, eval_every=10 ** 9)
+        if sch._next_tau >= 4:
+            break
+    new_cl.trace = TRACES[0]              # cpu_0: s = E surely
+    sch.run(max(0, 8 - (sch._next_tau - 0)), eval_every=10 ** 9)
+    sch.close()
+    slot = sch.slot_of[2]
+    cdf = np.asarray(sch.engine.s_cdf)[slot]
+    from repro.fed.engine import trace_cdf_row
+    np.testing.assert_array_equal(cdf, trace_cdf_row(TRACES[0],
+                                                     sch.engine.E))
+    post = [h.s[slot] for h in sch.history if h.tau >= 4]
+    assert post and all(s == 5.0 for s in post)
+
+
+def test_stager_failure_falls_back_to_sync_admit():
+    """A staging-thread failure must degrade to the synchronous path,
+    never corrupt state or deadlock the boundary."""
+    sch = make_scheduler(make_clients(2, seed=12, trace_idx=0),
+                         capacity=3, max_samples=600, prefetch=True)
+    new_cl = make_clients(1, seed=13, trace_idx=0)[0]
+    sch.push(Arrival(2, client=new_cl))
+
+    stager = sch._stager
+    orig = stager._stage
+
+    def boom(items, box):
+        box["err"] = RuntimeError("injected staging failure")
+        box["done"].set()
+    stager._stage = boom
+    sch.run(6, eval_every=10 ** 9)
+    sch.close()
+    stager._stage = orig
+    assert stager.stage_errors == 1
+    assert sch.prefetch_stats()["misses"] == 1       # sync fallback
+    slot = sch.slot_of[2]
+    assert all(h.s[slot] == 5.0 for h in sch.history if h.tau >= 2)
+
+
+def test_cohort_stager_supersede_and_close():
+    sch = make_scheduler(make_clients(2, seed=14), capacity=4,
+                         max_samples=600)
+    stager = CohortStager(sch.engine)
+    c = make_clients(1, seed=15)[0]
+    done = threading.Event()
+    orig = stager._stage
+
+    def slow(items, box):
+        done.wait(5.0)
+        orig(items, box)
+    stager._stage = slow
+    stager.submit([(None, c)])
+    stager.submit([(None, c)])            # supersedes the in-flight one
+    done.set()
+    cohort = stager.collect()
+    assert cohort is not None and cohort.k == 1
+    assert stager.superseded == 1
+    assert stager.collect() is None       # consumed
+    stager.close()                        # idempotent on empty
+
+
+# -- chunked (v2) federation checkpoints --------------------------------------
+
+def _eval_fn(params, x, y):
+    import jax.numpy as jnp
+    lg = logits_small(params, CFG, x)
+    ll = jax.nn.log_softmax(lg)
+    loss = -jnp.mean(jnp.take_along_axis(
+        ll, y[:, None].astype(jnp.int32), axis=1))
+    acc = jnp.mean((jnp.argmax(lg, -1) == y).astype(jnp.float32))
+    return float(loss), float(acc)
+
+
+def test_chunked_checkpoint_resume_bit_exact(tmp_path):
+    """A bank-backed scheduler checkpoints clients as per-client npz
+    chunks (v2) and a restored run continues bit-exactly."""
+    events = [Arrival(3, client=make_clients(1, seed=21, trace_idx=0)[0])]
+    ref = make_scheduler(make_clients(3, seed=20), capacity=4,
+                         max_samples=600, eval_fn=_eval_fn,
+                         events=list(events), prefetch=True)
+    ref.run(10, eval_every=5)
+    ref.close()
+
+    sch = make_scheduler(make_clients(3, seed=20), capacity=4,
+                         max_samples=600, eval_fn=_eval_fn,
+                         events=list(events), prefetch=True)
+    sch.run(6, eval_every=5)
+    ckpt = tmp_path / "ckpt"
+    sch.save(str(ckpt))
+    sch.close()
+    chunks = sorted((ckpt / "clients").glob("client-*.npz"))
+    assert len(chunks) == 4               # one npz per client
+
+    res = StreamScheduler.restore(str(ckpt), loss_fn=make_loss_fn(CFG),
+                                  eval_fn=_eval_fn)
+    assert res.bank is not None           # bank/prefetch survive restore
+    assert res._stager is not None
+    res.run(4, eval_every=5)
+    res.close()
+    assert_history_identical(ref.history, res.history)
+    assert_params_bitwise(ref.params, res.params)
+
+
+def test_chunked_checkpoint_rejects_corrupt_chunk(tmp_path):
+    from repro.checkpoint import CorruptCheckpointError
+    sch = make_scheduler(make_clients(3, seed=22), capacity=3,
+                         max_samples=600, prefetch=True)
+    sch.run(4, eval_every=4)
+    ckpt = tmp_path / "ckpt"
+    sch.save(str(ckpt))
+    sch.close()
+    chunk = sorted((ckpt / "clients").glob("client-*.npz"))[1]
+    raw = bytearray(chunk.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    chunk.write_bytes(bytes(raw))
+    with pytest.raises(CorruptCheckpointError):
+        StreamScheduler.restore(str(ckpt), loss_fn=make_loss_fn(CFG))
+
+
+# -- fuzz: the banked backend leg ---------------------------------------------
+
+def test_fuzz_banked_backend_parity():
+    """One corpus seed through the cross-backend fuzzer with the
+    bank-backed leg in the pool: the banked scheduler must walk the
+    exact same trajectory as the reference backend."""
+    from repro.fed.fuzz import make_backend_pool, run_cross_backend_case
+    pool = make_backend_pool(("client_parallel", "banked"))
+    out = run_cross_backend_case(pool, seed=3)
+    assert out["rounds"] > 0
+    assert "banked" in out["backends"]

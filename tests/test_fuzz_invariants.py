@@ -67,6 +67,46 @@ def test_case_replay_matches_fresh_generation(harness):
 
 # -- cross-backend parity ------------------------------------------------------
 
+def test_generator_fresh_arrival_taus_nondecreasing():
+    """Fresh payload arrivals register in *application* order, so the
+    generator's pool-order id model is only sound if their taus never
+    decrease.  Seed 41 used to invert two arrivals and hand a
+    TraceShift an id that didn't exist yet at its boundary
+    (clients[i] IndexError deep in a fuzz run)."""
+    for seed in range(64):
+        taus = [op[1]["tau"] for op in generate_case(seed).ops
+                if op[0] == "push" and op[1]["kind"] == "arrival"
+                and op[1].get("client_id", 0) < 0]
+        assert taus == sorted(taus), f"seed {seed}: {taus}"
+
+
+def test_trace_shift_does_not_mutate_aliased_payload():
+    """Copy-on-shift: the Client object a payload Arrival registered is
+    aliased by that event (and by any service journal replaying it
+    after a crash) — apply(TraceShift) must swap the registered object,
+    never write through the alias, or post-rollback replay re-registers
+    the shifted law and breaks chaos bit-exactness."""
+    from repro.core.participation import TRACES
+    from repro.fed import Arrival, TraceShift
+    from repro.fed.scenarios import _make_clients
+
+    st = FedState(clients=[], capacity=4)
+    payload = _make_clients(1, seed=3)[0]
+    original_trace = payload.trace
+    st.push(Arrival(0, client=payload))
+    assert st.due(0)
+    for _, _, e in sorted(st.queue):
+        st.apply(e, 0)
+    st.queue.clear()
+    cid = len(st.clients) - 1
+    st.apply(TraceShift(1, client_id=cid, trace=TRACES[0]), 1)
+    assert payload.trace is original_trace          # alias untouched
+    assert st.clients[cid].trace is TRACES[0]       # state shifted
+    # unknown device: no-op, never an IndexError
+    assert st.apply(TraceShift(1, client_id=99, trace=TRACES[0]),
+                    1) == ("", [])
+
+
 def test_backend_parity_parallel_vs_sequential():
     """The same seeded op schedules on the fused-vmap and streaming
     engines: exact control plane + s streams, params within tolerance.
